@@ -1,0 +1,82 @@
+"""Shared benchmark substrate: datasets, permutation strategies, CSV emit.
+
+The paper's matrices (hv15r 283M nnz, eukarya 360M, …) do not fit this
+container; every benchmark uses *structure-matched synthetic analogues* at
+reduced scale (DESIGN.md §8) and validates the paper's qualitative claims:
+which permutation wins where, comm-volume ratios, message-count curves.
+Communication volumes are EXACT (from the symbolic plans); local compute
+is measured on CPU; end-to-end "modeled" times combine exact bytes with
+the α-β network model calibrated to the paper's Slingshot-11 system.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import (CSC, CommModel, Partition1D, banded_clustered,
+                        block_diagonal_noise, degree_squared_weights,
+                        erdos_renyi, laplacian_2d, multilevel_partition,
+                        partition_to_permutation, permute_symmetric,
+                        random_permutation, rmat)
+
+MODEL = CommModel()
+
+
+def datasets(scale: int = 1) -> Dict[str, CSC]:
+    """Reduced-scale analogues. scale multiplies n (keep CI fast)."""
+    n = 2048 * scale
+    return {
+        "hv15r-like": banded_clustered(n, max(n // 80, 8), 12.0, seed=1),
+        "eukarya-like": erdos_renyi(n, n, 10.0, seed=2),
+        "nlpkkt-like": laplacian_2d(int(np.sqrt(n))),
+        "queen-like": block_diagonal_noise(n, 32, 10.0, 0.5, seed=3),
+    }
+
+
+def strategies(a: CSC, nparts: int):
+    """The paper's permutation menu: (name, matrix, Partition1D, prep_s)."""
+    out = []
+    out.append(("original", a, Partition1D.balanced(a.ncols, nparts), 0.0))
+
+    t0 = time.perf_counter()
+    rp = random_permutation(a.ncols, seed=0)
+    a_rand = permute_symmetric(a, rp)
+    t_rand = time.perf_counter() - t0
+    out.append(("random", a_rand, Partition1D.balanced(a.ncols, nparts),
+                t_rand))
+
+    t0 = time.perf_counter()
+    rep = multilevel_partition(a, nparts, seed=0)
+    perm, splits = partition_to_permutation(rep.parts, nparts)
+    a_part = permute_symmetric(a, perm)
+    t_metis = time.perf_counter() - t0
+    out.append(("metis-like", a_part, Partition1D(splits.astype(np.int64)),
+                t_metis))
+    return out
+
+
+class Csv:
+    """Collect `name,value,derived` rows; print at the end."""
+
+    def __init__(self, bench: str):
+        self.bench = bench
+        self.rows: List[str] = []
+
+    def add(self, name: str, value, derived: str = ""):
+        if isinstance(value, float):
+            value = f"{value:.6g}"
+        self.rows.append(f"{self.bench},{name},{value},{derived}")
+
+    def emit(self):
+        for r in self.rows:
+            print(r)
+
+
+def timer(fn: Callable, repeats: int = 1) -> float:
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats

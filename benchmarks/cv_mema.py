@@ -1,0 +1,25 @@
+"""§V.A — the CV/memA criterion: when to graph-partition.
+
+Computes the paper's decision parameter (planned comm volume / size of A)
+for every dataset × permutation; values ≳0.3 ⇒ partition first."""
+
+from __future__ import annotations
+
+from repro.core import spgemm_1d
+
+from .common import Csv, datasets, strategies
+
+
+def main(scale: int = 1) -> Csv:
+    csv = Csv("cv_mema")
+    for dname, a in datasets(scale).items():
+        for sname, mat, part, _ in strategies(a, 16):
+            plan = spgemm_1d(mat, mat, 16, part_k=part, part_n=part).plan
+            cv = plan.cv_over_mema
+            csv.add(f"{dname}/{sname}", cv,
+                    "partition recommended" if cv > 0.3 else "keep as-is")
+    return csv
+
+
+if __name__ == "__main__":
+    main().emit()

@@ -1,0 +1,36 @@
+"""Device-ring static-shape accounting: exact vs padded bytes.
+
+The TPU translation of Algorithm 1 pads each ring step's payload to the
+max over pairs (DESIGN.md §2 "static-shape honesty"). This benchmark
+quantifies the padding tax across process counts and tile sizes, on the
+structured vs unstructured inputs — the structured case both fetches less
+AND pads less (uniform per-pair loads after clustering).
+"""
+
+from __future__ import annotations
+
+from repro.core.spgemm_1d_device import build_device_plan
+
+from .common import Csv, datasets
+
+
+def main(scale: int = 1) -> Csv:
+    csv = Csv("device_ring")
+    data = datasets(scale)
+    for dname in ("hv15r-like", "eukarya-like"):
+        a = data[dname]
+        for nparts in (4, 8, 16):
+            for bs in (64, 128):
+                plan = build_device_plan(a, a, nparts=nparts, bs=bs)
+                exact = plan.exact_bytes
+                padded = plan.padded_bytes
+                csv.add(f"{dname}/P={nparts}/bs={bs}/exact_MB",
+                        exact / 2**20)
+                csv.add(f"{dname}/P={nparts}/bs={bs}/padded_MB",
+                        padded / 2**20,
+                        f"padding tax x{padded / max(exact, 1):.2f}")
+    return csv
+
+
+if __name__ == "__main__":
+    main().emit()

@@ -1,0 +1,33 @@
+"""Fig. 6 — block-fetch strategy: RDMA message count and fetched bytes vs
+the split number K (Algorithm 2's tradeoff curve)."""
+
+from __future__ import annotations
+
+from repro.core import Partition1D, build_fetch_plan
+
+from .common import MODEL, Csv, datasets
+
+
+def main(scale: int = 1) -> Csv:
+    csv = Csv("fig06")
+    a = datasets(scale)["hv15r-like"]
+    nparts = 16
+    part = Partition1D.balanced(a.ncols, nparts)
+    base = None
+    for k in (1, 4, 16, 64, 256, 1024, 4096):
+        plan = build_fetch_plan(a, a, part, part, nblocks=k)
+        msgs = plan.total_messages
+        mb = plan.total_fetched_bytes / 2**20
+        t = MODEL.time(plan.per_process_fetched_bytes().max(),
+                       plan.per_process_messages().max())
+        if base is None:
+            base = mb
+        csv.add(f"K={k}/messages", msgs)
+        csv.add(f"K={k}/fetched_MB", mb,
+                f"overfetch x{mb / max(plan.total_required_bytes / 2**20, 1e-9):.2f}")
+        csv.add(f"K={k}/modeled_ms", t * 1e3)
+    return csv
+
+
+if __name__ == "__main__":
+    main().emit()

@@ -1,0 +1,36 @@
+"""Fig. 7 — process-count / threads-per-process sweep at fixed core count.
+
+The MPI analogue: given C "cores", vary P (processes) with t = C/P threads.
+More processes ⇒ more parallel compute but more (and smaller) fetches;
+fewer ⇒ sequential-copy overhead. Modeled time = per-process comm (α-β) +
+measured local SpGEMM time scaled by threads (ideal within-process
+scaling, as the paper's OpenMP regions approximately achieve)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import spgemm_1d
+
+from .common import MODEL, Csv, datasets
+
+
+def main(scale: int = 1) -> Csv:
+    csv = Csv("fig07")
+    a = datasets(scale)["hv15r-like"]
+    cores = 64
+    for nparts in (4, 8, 16, 32, 64):
+        threads = cores // nparts
+        res = spgemm_1d(a, a, nparts)
+        comm = MODEL.time(res.comm_bytes.max(), res.comm_messages.max())
+        comp = res.t_compute.max() / max(threads, 1)
+        other = res.t_pack.max()  # sequential: does NOT scale with threads
+        total = comm + comp + other
+        csv.add(f"P={nparts}xT={threads}/total_ms", total * 1e3)
+        csv.add(f"P={nparts}xT={threads}/comm_ms", comm * 1e3)
+        csv.add(f"P={nparts}xT={threads}/compute_ms", comp * 1e3)
+    return csv
+
+
+if __name__ == "__main__":
+    main().emit()

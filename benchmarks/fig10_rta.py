@@ -1,0 +1,52 @@
+"""Figs. 10–11 — restriction-operator product RᵀA: permutation comparison
+(Fig. 10) and scaling across datasets + algorithm comparison (Fig. 11)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (restriction_operator, spgemm_1d,
+                        summa2d_comm_volume)
+
+from .common import MODEL, Csv, datasets, strategies
+
+
+def main(scale: int = 1) -> Csv:
+    csv = Csv("fig10_11")
+    data = datasets(scale)
+    # Fig. 10: queen-like, RᵀA, original vs random, per-process breakdown
+    a = data["queen-like"]
+    r = restriction_operator(a, coarsening=64)
+    rt = r.transpose()
+    for sname, mat, part, _ in strategies(a, 16):
+        if sname == "metis-like":
+            continue
+        # permute R's rows to match A's ordering: R^T A with A permuted
+        res = spgemm_1d(rt, mat, 16, part_n=part)
+        csv.add(f"fig10/queen-like/{sname}/comm_MB",
+                res.plan.total_fetched_bytes / 2**20)
+        csv.add(f"fig10/queen-like/{sname}/compute_ms_max",
+                res.t_compute.max() * 1e3)
+        csv.add(f"fig10/queen-like/{sname}/other_ms_max",
+                res.t_pack.max() * 1e3,
+                "paper: other dominates; workload too small")
+
+    # Fig. 11: scaling + 1D vs 2D on RᵀA for all datasets
+    for dname, a in data.items():
+        r = restriction_operator(a, coarsening=64)
+        rt = r.transpose()
+        for nparts in (16, 64):
+            res = spgemm_1d(rt, a, nparts)
+            t = MODEL.time(res.comm_bytes.max(), res.comm_messages.max()) \
+                + res.t_compute.max()
+            csv.add(f"fig11/{dname}/P={nparts}/1d_ms", t * 1e3)
+            grid = int(np.sqrt(nparts))
+            v2 = summa2d_comm_volume(rt, a, grid)
+            t2 = MODEL.time(v2["per_process_bytes"].max(),
+                            v2["messages"] / nparts)
+            csv.add(f"fig11/{dname}/P={nparts}/2d_comm_ms", t2 * 1e3)
+    return csv
+
+
+if __name__ == "__main__":
+    main().emit()

@@ -1,0 +1,37 @@
+"""Fig. 12 — right multiplication (RᵀA)·R: sparsity-aware 1D vs the
+outer-product algorithm (Algorithm 3). Paper: outer-product wins for this
+short-fat × tall-skinny shape."""
+
+from __future__ import annotations
+
+from repro.core import restriction_operator, spgemm_1d, spgemm_outer_1d
+
+from .common import MODEL, Csv, datasets
+
+
+def main(scale: int = 1) -> Csv:
+    csv = Csv("fig12")
+    data = datasets(scale)
+    for dname in ("queen-like", "nlpkkt-like"):
+        a = data[dname]
+        r = restriction_operator(a, coarsening=64)
+        rta = spgemm_1d(r.transpose(), a, 16).concat()
+        for nparts in (16, 64):
+            res1 = spgemm_1d(rta, r, nparts)
+            t1 = MODEL.time(res1.comm_bytes.max(),
+                            res1.comm_messages.max()) \
+                + res1.t_compute.max()
+            reso = spgemm_outer_1d(rta, r, nparts)
+            to = MODEL.time(reso.total_bytes / nparts, 2 * nparts)
+            csv.add(f"{dname}/P={nparts}/1d_ms", t1 * 1e3)
+            csv.add(f"{dname}/P={nparts}/outer_ms", to * 1e3,
+                    "paper: outer-product preferred")
+            csv.add(f"{dname}/P={nparts}/1d_comm_MB",
+                    res1.plan.total_fetched_bytes / 2**20)
+            csv.add(f"{dname}/P={nparts}/outer_comm_MB",
+                    reso.total_bytes / 2**20)
+    return csv
+
+
+if __name__ == "__main__":
+    main().emit()

@@ -1,0 +1,48 @@
+"""Run every paper-figure benchmark; print ``bench,name,value,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--scale N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (cv_mema, device_ring, fig04_permutation,
+               fig05_comm_volume, fig06_block_fetch, fig07_config_sweep,
+               fig08_breakdown, fig09_strong_scaling, fig10_rta,
+               fig12_outer_product, fig13_bc, moe_dispatch)
+
+MODULES = [
+    fig04_permutation, fig05_comm_volume, fig06_block_fetch,
+    fig07_config_sweep, fig08_breakdown, fig09_strong_scaling,
+    fig10_rta, fig12_outer_product, fig13_bc, cv_mema, moe_dispatch,
+    device_ring,
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    print("bench,name,value,derived")
+    failures = 0
+    for mod in MODULES:
+        t0 = time.perf_counter()
+        try:
+            csv = mod.main(scale=args.scale)
+            csv.emit()
+            print(f"# {mod.__name__}: ok "
+                  f"({time.perf_counter() - t0:.1f}s)", file=sys.stderr)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"# {mod.__name__}: FAILED", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

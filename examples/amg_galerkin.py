@@ -1,0 +1,36 @@
+"""AMG Galerkin product RᵀAR with distributed SpGEMM (paper §IV.B).
+
+    PYTHONPATH=src python examples/amg_galerkin.py
+
+Builds a 2D-Laplacian fine grid, aggregates a restriction operator, and
+computes the coarse operator two ways — sparsity-aware 1D for the left
+multiplication, then both the 1D and the outer-product (Algorithm 3)
+variants for the right — reproducing the paper's Fig. 12 comparison.
+"""
+
+import numpy as np
+
+from repro.apps import galerkin_product
+from repro.core import laplacian_2d, restriction_operator
+
+
+def main():
+    a = laplacian_2d(48)                       # 2304-dof Poisson matrix
+    r = restriction_operator(a, coarsening=36)
+    print(f"fine: {a.shape} nnz={a.nnz};  R: {r.shape} nnz={r.nnz}")
+
+    for alg in ("outer", "1d"):
+        res = galerkin_product(a, r=r, nparts=8, right_algorithm=alg)
+        print(f"right={alg:5s}: coarse {res.coarse.shape} "
+              f"nnz={res.coarse.nnz}, left {res.left_bytes / 1024:.1f} KiB, "
+              f"right {res.right_bytes / 1024:.1f} KiB")
+
+    # verify against dense algebra
+    res = galerkin_product(a, r=r, nparts=8)
+    want = r.to_dense().T @ a.to_dense() @ r.to_dense()
+    ok = np.allclose(res.coarse.to_dense(), want, atol=1e-8)
+    print(f"coarse operator correct: {ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""The paper's technique inside an LM: SpGEMM-framed MoE dispatch.
+
+    PYTHONPATH=src python examples/moe_dispatch.py
+
+Shows the token->expert routing matrix as the sparse A of Algorithm 1,
+capacity buckets as the block-fetch unit, and the required-vs-fetched
+accounting that the paper reports for RDMA traffic (DESIGN.md §3).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models.moe import moe_apply, moe_init
+
+
+def main():
+    cfg = smoke_config("qwen2-moe-a2.7b")
+    moe = cfg.moe
+    print(f"{cfg.name}: {moe.n_experts} routed experts (top-{moe.top_k}) "
+          f"+ {moe.n_shared} shared, padded to {moe.n_experts_padded} "
+          f"for EP sharding")
+
+    params = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64, cfg.d_model))
+    y, aux, m = moe_apply(params, cfg, x, use_kernel=False)
+
+    routed = int(m["moe/routed_tokens"])
+    slots = int(m["moe/capacity_slots"])
+    print(f"tokens routed (paper: required bytes) : {routed}")
+    print(f"capacity slots (paper: fetched bytes) : {slots}")
+    print(f"over-fetch ratio (block-fetch padding): {slots / routed:.2f}x")
+    print(f"dropped at capacity                   : {int(m['moe/dropped'])}")
+    print(f"router aux loss                       : {float(aux):.5f}")
+    print(f"output: {y.shape}, finite={bool(jnp.isfinite(y).all())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: sparsity-aware 1D SpGEMM in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a structured sparse matrix, squares it with the paper's Algorithm 1
+across 8 logical processes, shows the communication plan (hit vectors +
+block fetches), compares against 2D sparse SUMMA, and verifies the result
+against the dense oracle.
+"""
+
+import numpy as np
+
+from repro.core import (banded_clustered, build_fetch_plan, cv_over_mema,
+                        Partition1D, random_permutation, permute_symmetric,
+                        spgemm_1d, summa2d_comm_volume)
+
+
+def main():
+    n, nparts = 1024, 8
+    a = banded_clustered(n, band=16, d=8.0, seed=0)
+    print(f"A: {a.shape}, nnz={a.nnz}, nzc={a.nzc}")
+
+    # --- the symbolic phase: what would move? -------------------------------
+    part = Partition1D.balanced(n, nparts)
+    plan = build_fetch_plan(a, a, part, part, nblocks=64)
+    print(f"planned fetch: {plan.total_fetched_bytes / 2**20:.3f} MiB "
+          f"(exact need {plan.total_required_bytes / 2**20:.3f} MiB) "
+          f"in {plan.total_messages} messages")
+    print(f"CV/memA = {plan.cv_over_mema:.3f} "
+          f"({'partition first!' if plan.cv_over_mema > 0.3 else 'good as-is'})")
+
+    # --- run it --------------------------------------------------------------
+    res = spgemm_1d(a, a, nparts)
+    c = res.concat()
+    dense = a.to_dense()
+    ok = np.allclose(c.to_dense(), dense @ dense, atol=1e-8)
+    print(f"C = A @ A: nnz={c.nnz}, correct={ok}")
+
+    # --- why sparsity-awareness matters --------------------------------------
+    v2d = summa2d_comm_volume(a, a, int(np.sqrt(nparts)))
+    print(f"2D SUMMA would move {v2d['total_bytes'] / 2**20:.3f} MiB "
+          f"({v2d['total_bytes'] / max(plan.total_fetched_bytes, 1):.1f}x more)")
+
+    # --- and why random permutation hurts the 1D algorithm ------------------
+    ar = permute_symmetric(a, random_permutation(n, seed=1))
+    cv_r = cv_over_mema(ar, ar, nparts)
+    print(f"after random permutation CV/memA = {cv_r:.3f} "
+          f"(vs {plan.cv_over_mema:.3f} native) — clustering is the asset")
+
+
+if __name__ == "__main__":
+    main()

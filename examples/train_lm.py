@@ -1,0 +1,77 @@
+"""End-to-end LM training driver (~100M params by default).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+    PYTHONPATH=src python examples/train_lm.py --tiny --steps 30   # CI-fast
+
+Full production path: synthetic sharded data pipeline -> mixed-precision
+train step (chunked CE, remat) -> AdamW+cosine -> checkpoint every 50
+steps with auto-resume -> straggler stats. The model is a qwen3-family
+decoder scaled to ~100M params; cross-entropy drops visibly within a few
+hundred steps on the structured synthetic stream.
+"""
+
+import argparse
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data import SyntheticLMDataset
+from repro.models import init_params
+from repro.runtime import TrainLoopRunner
+from repro.train import AdamWConfig, init_train_state, make_train_step
+
+
+def model_100m() -> ModelConfig:
+    return ModelConfig(
+        name="repro-100m", family="dense", n_layers=10, d_model=768,
+        n_heads=12, n_kv_heads=4, d_ff=3072, vocab=32768, head_dim=64,
+        pattern=("a",), mlp="swiglu", qk_norm=True, dtype="float32",
+        remat="none")
+
+
+def model_tiny() -> ModelConfig:
+    return dataclasses.replace(model_100m(), name="repro-tiny",
+                               n_layers=2, d_model=128, d_ff=512,
+                               vocab=2048)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = model_tiny() if args.tiny else model_100m()
+    print(f"{cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamWConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps)
+    step = jax.jit(make_train_step(cfg, opt))
+    state = init_train_state(cfg, params)
+    ds = SyntheticLMDataset(cfg.vocab, args.seq, args.batch, seed=0)
+
+    runner = TrainLoopRunner(step, state, args.ckpt_dir, ckpt_every=50)
+    losses = []
+
+    def log(s, m):
+        losses.append(m["loss/ce"])
+        print(json.dumps({"step": s, "ce": round(m["loss/ce"], 4),
+                          "lr": round(m["opt/lr"], 6),
+                          "sec/step": round(m["step_time_mean"], 3)}))
+
+    runner.run(lambda s: {k: jnp.asarray(v) for k, v in
+                          ds.batch(s).items()},
+               num_steps=args.steps, log_every=10, log_fn=log)
+    if len(losses) >= 2:
+        print(f"CE {losses[0]:.3f} -> {losses[-1]:.3f} "
+              f"({'improved' if losses[-1] < losses[0] else 'check setup'})")
+
+
+if __name__ == "__main__":
+    main()

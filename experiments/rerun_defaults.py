@@ -1,0 +1,26 @@
+"""Re-sweep all single-pod cells with the post-hillclimb default code
+(vocab-sharded CE, grouped-GQA decode, pinned bf16 cast) -> dryrun_v2/."""
+import json, os, sys, time, traceback
+sys.path.insert(0, "src")
+from repro.launch.dryrun import lower_cell  # sets XLA_FLAGS first
+from repro.configs import SHAPES, list_archs
+
+out = "experiments/dryrun_v2"
+os.makedirs(out, exist_ok=True)
+for a in list_archs():
+    for s in SHAPES:
+        tag = f"{a}__{s}__single"
+        path = os.path.join(out, tag + ".json")
+        if os.path.exists(path):
+            continue
+        t0 = time.time()
+        try:
+            rec, _ = lower_cell(a, s, multi_pod=False, verbose=False)
+        except Exception as e:
+            rec = {"arch": a, "shape": s, "mesh": "16x16",
+                   "status": "FAILED", "error": repr(e)}
+            traceback.print_exc()
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, default=float)
+        print(f"{tag}: {rec['status']} ({time.time()-t0:.0f}s)", flush=True)
+print("DONE")

@@ -1,0 +1,4 @@
+"""repro — sparsity-aware 1D SpGEMM (Hong & Buluc 2024) as a JAX/TPU
+multi-pod training/serving framework. See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+from .amg import GalerkinResult, galerkin_product
+from .bc import BCResult, bc_batch

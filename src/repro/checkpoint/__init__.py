@@ -1,0 +1,2 @@
+from .store import (CheckpointManager, latest_step, restore_checkpoint,
+                    save_checkpoint)

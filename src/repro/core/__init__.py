@@ -1,0 +1,33 @@
+"""Core: the paper's contribution — sparsity-aware 1D SpGEMM.
+
+Layers:
+  sparse.py        element-level CSC/DCSC substrate + generators (numpy)
+  semiring.py      plus-times / boolean / tropical semirings
+  local_spgemm.py  vectorized Gustavson local multiply (the oracle)
+  plan.py          Algorithms 1-2 symbolic phase: hit vectors, block-fetch
+                   plans, CV/memA, exact 2D/3D comm accounting
+  spgemm_1d.py     Algorithm 1 execution (host path, per-process instrumented)
+  spgemm_outer.py  Algorithm 3 (outer-product 1D, for (R^T A) R)
+  spgemm_2d.py     sparse 2D SUMMA baseline
+  spgemm_3d.py     Split-3D-SpGEMM baseline
+  partition.py     random permutation + METIS-style multilevel partitioner
+  blocksparse.py   MXU-aligned block-sparse tiles (device payloads)
+  spgemm_1d_device.py  shard_map ring execution of the fetch plan (TPU path)
+"""
+
+from .semiring import BOOL_OR_AND, MIN_PLUS, PLUS_TIMES, Semiring, by_name
+from .sparse import (CSC, banded_clustered, block_diagonal_noise, erdos_renyi,
+                     from_coo, from_dense, identity, laplacian_2d,
+                     permute_cols, permute_rows, permute_symmetric,
+                     restriction_operator, rmat, symmetrize)
+from .local_spgemm import spadd, spgemm, spgemm_flops, spgemm_structure
+from .plan import (BYTES_PER_NNZ, CommModel, FetchPlan, Partition1D,
+                   build_fetch_plan, block_fetch_groups, cv_over_mema,
+                   summa2d_comm_volume, summa3d_comm_volume)
+from .spgemm_1d import SpGEMM1DResult, spgemm_1d, spgemm_1d_simple
+from .spgemm_outer import OuterProductResult, spgemm_outer_1d
+from .spgemm_2d import SpGEMM2DResult, spgemm_2d
+from .spgemm_3d import SpGEMM3DResult, spgemm_3d
+from .partition import (PartitionReport, degree_squared_weights, edge_cut,
+                        multilevel_partition, partition_to_permutation,
+                        random_permutation)

@@ -1,0 +1,230 @@
+"""MXU-aligned block-sparse tiles — the device payload format.
+
+The MPI original stores elementwise DCSC and probes hash tables per scalar.
+A TPU has no scalar-probe analogue: the MXU wants dense ``bs × bs`` tiles.
+So the device representation is *block-sparse*: the matrix is cut into a
+``(m/bs) × (n/bs)`` tile grid and only nonempty tiles are materialized as
+dense payloads. Sparsity-awareness then operates at tile granularity — which
+is exactly the paper's block-fetch strategy (Algorithm 2) promoted from a
+message-coalescing trick to the storage format itself.
+
+Two pieces live here:
+
+  * :class:`BlockSparse` — host container: dense tile payloads (ntiles, bs,
+    bs) + (tile_row, tile_col) coordinates, convertible to/from CSC.
+  * :func:`build_schedule` — the *product schedule*: for ``C = A·B`` over
+    block-sparse operands, the static list of tile-products
+    ``(a_slot, b_slot, c_slot)`` such that ``C[c_slot] += A[a_slot] @
+    B[b_slot]``. Products are sorted by output tile so a Pallas kernel can
+    stream them with a revisit-free accumulator (see kernels/bsr_spgemm).
+
+All shapes the kernel sees are static: the schedule is host-computed from
+sparsity *metadata* (the same information Algorithm 1's symbolic phase
+allgathers) before tracing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .sparse import CSC, from_coo
+
+__all__ = [
+    "BlockSparse",
+    "ProductSchedule",
+    "from_csc",
+    "build_schedule",
+    "DEFAULT_BLOCK",
+]
+
+DEFAULT_BLOCK = 128  # MXU systolic array is 128x128; keep tiles aligned
+
+
+@dataclasses.dataclass
+class BlockSparse:
+    """Block-sparse matrix: only nonempty ``bs×bs`` tiles are stored.
+
+    tiles     : (ntiles, bs, bs) dense payloads (f32 by default)
+    tile_rows : (ntiles,) tile-grid row of each payload
+    tile_cols : (ntiles,) tile-grid col of each payload, sorted (col, row)
+    shape     : logical (padded) element shape, multiples of bs
+    orig_shape: pre-padding element shape
+    """
+
+    tiles: np.ndarray
+    tile_rows: np.ndarray
+    tile_cols: np.ndarray
+    shape: Tuple[int, int]
+    orig_shape: Tuple[int, int]
+    bs: int
+
+    @property
+    def ntiles(self) -> int:
+        return int(self.tiles.shape[0])
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        return (self.shape[0] // self.bs, self.shape[1] // self.bs)
+
+    @property
+    def nbytes_payload(self) -> int:
+        return self.tiles.nbytes
+
+    def tile_nnz(self) -> np.ndarray:
+        """Stored-element count per tile (for fill diagnostics)."""
+        return (self.tiles != 0).sum(axis=(1, 2))
+
+    def fill_fraction(self) -> float:
+        """nnz / stored payload elements — over-fetch diagnostic."""
+        if self.ntiles == 0:
+            return 1.0
+        return float(self.tile_nnz().sum()) / self.tiles.size
+
+    # ---- conversions ------------------------------------------------------
+    def to_dense(self) -> np.ndarray:
+        out = np.zeros(self.shape, dtype=self.tiles.dtype)
+        bs = self.bs
+        for t in range(self.ntiles):
+            r, c = self.tile_rows[t] * bs, self.tile_cols[t] * bs
+            out[r:r + bs, c:c + bs] = self.tiles[t]
+        return out[: self.orig_shape[0], : self.orig_shape[1]]
+
+    def to_csc(self, tol: float = 0.0) -> CSC:
+        d = self.to_dense()
+        rows, cols = np.nonzero(np.abs(d) > tol)
+        return from_coo(rows, cols, d[rows, cols], self.orig_shape)
+
+    def col_block_ids(self) -> np.ndarray:
+        """Distinct nonempty tile columns (DCSC-style column compression
+        lifted to tile granularity)."""
+        return np.unique(self.tile_cols)
+
+
+def from_csc(a: CSC, bs: int = DEFAULT_BLOCK,
+             dtype=np.float32) -> BlockSparse:
+    """Blockize a CSC matrix: nonempty tiles become dense payloads."""
+    m, n = a.shape
+    gm, gn = math.ceil(max(m, 1) / bs), math.ceil(max(n, 1) / bs)
+    rows, cols, vals = a.to_coo()
+    tr, tc = rows // bs, cols // bs
+    key = tc * gm + tr
+    order = np.argsort(key, kind="stable")
+    key_s = key[order]
+    uniq_mask = np.empty(len(key_s), dtype=bool)
+    if len(key_s):
+        uniq_mask[0] = True
+        np.not_equal(key_s[1:], key_s[:-1], out=uniq_mask[1:])
+        uniq_keys = key_s[uniq_mask]
+    else:
+        uniq_keys = np.zeros(0, dtype=np.int64)
+    ntiles = len(uniq_keys)
+    tiles = np.zeros((ntiles, bs, bs), dtype=dtype)
+    slot_of_key = {int(k): i for i, k in enumerate(uniq_keys)}
+    slot = np.array([slot_of_key[int(k)] for k in key], dtype=np.int64) \
+        if len(key) else np.zeros(0, dtype=np.int64)
+    tiles[slot, rows % bs, cols % bs] = vals.astype(dtype)
+    return BlockSparse(
+        tiles=tiles,
+        tile_rows=(uniq_keys % gm).astype(np.int32),
+        tile_cols=(uniq_keys // gm).astype(np.int32),
+        shape=(gm * bs, gn * bs),
+        orig_shape=(m, n),
+        bs=bs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# product schedule for C = A @ B over block-sparse operands
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ProductSchedule:
+    """Static tile-product schedule, sorted by output slot.
+
+    a_slot / b_slot : (nprod,) payload indices into A.tiles / B.tiles
+    c_slot          : (nprod,) output payload index; nondecreasing
+    c_rows / c_cols : (nc,) tile-grid coordinates of the output payloads
+    nprod, nc       : schedule length / number of output tiles
+    flops           : dense MXU flops the schedule will execute
+    """
+
+    a_slot: np.ndarray
+    b_slot: np.ndarray
+    c_slot: np.ndarray
+    c_rows: np.ndarray
+    c_cols: np.ndarray
+    nprod: int
+    nc: int
+    flops: int
+
+    def first_visit(self) -> np.ndarray:
+        """(nprod,) bool: product s is the first touching its output tile —
+        drives the accumulator-reset predicate in the kernel."""
+        fv = np.empty(self.nprod, dtype=bool)
+        if self.nprod:
+            fv[0] = True
+            np.not_equal(self.c_slot[1:], self.c_slot[:-1], out=fv[1:])
+        return fv
+
+
+def build_schedule(a: BlockSparse, b: BlockSparse) -> ProductSchedule:
+    """Symbolic tile-level multiply: match A's tile-cols to B's tile-rows.
+
+    Sorted so every output tile's products are contiguous (revisit-free
+    accumulation in a single sequential Pallas grid).
+    """
+    assert a.shape[1] == b.shape[0], (a.shape, b.shape)
+    assert a.bs == b.bs
+    gm = a.grid[0]
+
+    # join on the contraction tile index k: A tile (i, k) × B tile (k, j)
+    order_a = np.argsort(a.tile_cols, kind="stable")
+    order_b = np.argsort(b.tile_rows, kind="stable")
+    ak = a.tile_cols[order_a]
+    bk = b.tile_rows[order_b]
+
+    # counts per k on each side, then cartesian expansion per k
+    nk = a.grid[1]
+    ca = np.bincount(ak, minlength=nk)
+    cb = np.bincount(bk, minlength=nk)
+    starts_a = np.concatenate([[0], np.cumsum(ca)])
+    starts_b = np.concatenate([[0], np.cumsum(cb)])
+
+    a_sl, b_sl = [], []
+    for k in range(nk):
+        na_, nb_ = ca[k], cb[k]
+        if na_ == 0 or nb_ == 0:
+            continue
+        ia = order_a[starts_a[k]:starts_a[k] + na_]
+        ib = order_b[starts_b[k]:starts_b[k] + nb_]
+        a_sl.append(np.repeat(ia, nb_))
+        b_sl.append(np.tile(ib, na_))
+    if not a_sl:
+        z = np.zeros(0, dtype=np.int64)
+        return ProductSchedule(z, z, z, z.astype(np.int32),
+                               z.astype(np.int32), 0, 0, 0)
+    a_slot = np.concatenate(a_sl)
+    b_slot = np.concatenate(b_sl)
+
+    # output tile coordinates and dedup to slots
+    oi = a.tile_rows[a_slot].astype(np.int64)
+    oj = b.tile_cols[b_slot].astype(np.int64)
+    okey = oj * gm + oi
+    order = np.argsort(okey, kind="stable")
+    a_slot, b_slot, okey = a_slot[order], b_slot[order], okey[order]
+    uniq_keys, c_slot = np.unique(okey, return_inverse=True)
+
+    return ProductSchedule(
+        a_slot=a_slot.astype(np.int32),
+        b_slot=b_slot.astype(np.int32),
+        c_slot=c_slot.astype(np.int32),
+        c_rows=(uniq_keys % gm).astype(np.int32),
+        c_cols=(uniq_keys // gm).astype(np.int32),
+        nprod=len(a_slot),
+        nc=len(uniq_keys),
+        flops=2 * len(a_slot) * a.bs ** 3,
+    )

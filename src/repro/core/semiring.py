@@ -1,0 +1,98 @@
+"""Semirings for SpGEMM.
+
+The betweenness-centrality application multiplies over non-arithmetic
+semirings (boolean or-and for BFS frontier expansion; plus-times for path
+counting and the backward sweep). The local SpGEMM in ``local_spgemm.py`` and
+the distributed algorithms are all parameterized over a :class:`Semiring`.
+
+Each semiring supplies the scalar multiply, a segment-reduce for the additive
+monoid (numpy path), jnp-side add/mul (device path), and the additive
+identity used to prune explicit zeros.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["Semiring", "PLUS_TIMES", "BOOL_OR_AND", "MIN_PLUS", "by_name"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    name: str
+    # scalar/vector multiply on numpy arrays
+    mul: Callable[[np.ndarray, np.ndarray], np.ndarray]
+    # segment-reduce of the additive monoid: (vals, segment_starts) -> reduced
+    add_reduceat: Callable[[np.ndarray, np.ndarray], np.ndarray]
+    # additive identity (entries equal to this are pruned from results)
+    zero: float
+    # jnp-side ops for dense-tile execution (x: [..,bs,bs] tiles)
+    jnp_matmul: Callable  # (a_tile, b_tile) -> c_tile contribution
+    jnp_add: Callable     # (acc, contribution) -> acc
+
+    def prune_mask(self, vals: np.ndarray) -> np.ndarray:
+        if np.isinf(self.zero):
+            return np.isfinite(vals)
+        return vals != self.zero
+
+
+def _make_plus_times() -> Semiring:
+    import jax.numpy as jnp
+
+    return Semiring(
+        name="plus_times",
+        mul=np.multiply,
+        add_reduceat=lambda v, s: np.add.reduceat(v, s),
+        zero=0.0,
+        jnp_matmul=lambda a, b: jnp.matmul(
+            a, b, preferred_element_type=jnp.float32),
+        jnp_add=lambda acc, c: acc + c,
+    )
+
+
+def _make_bool_or_and() -> Semiring:
+    import jax.numpy as jnp
+
+    # represent booleans as {0.0, 1.0}; or == max, and == min(prod on 0/1)
+    return Semiring(
+        name="bool_or_and",
+        mul=lambda a, b: (a != 0).astype(np.float64) * (b != 0),
+        add_reduceat=lambda v, s: np.maximum.reduceat(v, s),
+        zero=0.0,
+        jnp_matmul=lambda a, b: jnp.clip(
+            jnp.matmul((a != 0).astype(jnp.float32),
+                       (b != 0).astype(jnp.float32),
+                       preferred_element_type=jnp.float32), 0.0, 1.0),
+        jnp_add=lambda acc, c: jnp.maximum(acc, c),
+    )
+
+
+def _make_min_plus() -> Semiring:
+    import jax.numpy as jnp
+
+    def _mp_matmul(a, b):
+        # (i,k)+(k,j) min over k — tropical product of dense tiles
+        return jnp.min(a[..., :, :, None] + b[..., None, :, :], axis=-2)
+
+    return Semiring(
+        name="min_plus",
+        mul=np.add,
+        add_reduceat=lambda v, s: np.minimum.reduceat(v, s),
+        zero=float("inf"),
+        jnp_matmul=_mp_matmul,
+        jnp_add=lambda acc, c: jnp.minimum(acc, c),
+    )
+
+
+PLUS_TIMES = _make_plus_times()
+BOOL_OR_AND = _make_bool_or_and()
+MIN_PLUS = _make_min_plus()
+
+_REGISTRY = {s.name: s for s in (PLUS_TIMES, BOOL_OR_AND, MIN_PLUS)}
+
+
+def by_name(name: str) -> Semiring:
+    return _REGISTRY[name]

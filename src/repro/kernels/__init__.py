@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+bsr_spgemm/      scheduled block-sparse matmul — the local SpGEMM engine
+flash_attention/ causal flash attention (GQA, sliding window, softcap)
+moe_gemm/        grouped expert GEMM over capacity buckets (MoE dispatch)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+model-facing wrapper) and ref.py (pure-jnp oracle); tests sweep shapes and
+dtypes asserting allclose against the oracle in interpret mode.
+"""

@@ -1,0 +1,3 @@
+from .kernel import bsr_spgemm_pallas
+from .ops import local_spgemm_device, schedule_flags
+from .ref import bsr_spgemm_ref

@@ -1,0 +1,72 @@
+"""High-level ops for the block-sparse SpGEMM kernel.
+
+``local_spgemm_device`` multiplies two host-side :class:`BlockSparse`
+matrices through the Pallas kernel (interpret mode on CPU, compiled on TPU)
+and returns a BlockSparse result. The schedule is host-built; the kernel
+only ever sees static shapes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.blocksparse import BlockSparse, ProductSchedule, build_schedule
+from .kernel import bsr_spgemm_pallas
+from .ref import bsr_spgemm_ref
+
+__all__ = ["schedule_flags", "local_spgemm_device"]
+
+
+def schedule_flags(sched: ProductSchedule) -> np.ndarray:
+    """Pack first/last-visit booleans into the kernel's i32 flag word."""
+    first = sched.first_visit()
+    last = np.empty(sched.nprod, dtype=bool)
+    if sched.nprod:
+        last[-1] = True
+        np.not_equal(sched.c_slot[1:], sched.c_slot[:-1], out=last[:-1])
+    return (first.astype(np.int32) | (last.astype(np.int32) << 1))
+
+
+def local_spgemm_device(a: BlockSparse, b: BlockSparse,
+                        *, use_kernel: bool = True,
+                        interpret: Optional[bool] = None) -> BlockSparse:
+    """C = A @ B on device. Falls back to the jnp ref when asked."""
+    assert a.bs == b.bs
+    sched = build_schedule(a, b)
+    bs = a.bs
+    if sched.nprod == 0:
+        return BlockSparse(
+            tiles=np.zeros((0, bs, bs), dtype=a.tiles.dtype),
+            tile_rows=np.zeros(0, dtype=np.int32),
+            tile_cols=np.zeros(0, dtype=np.int32),
+            shape=(a.shape[0], b.shape[1]),
+            orig_shape=(a.orig_shape[0], b.orig_shape[1]),
+            bs=bs,
+        )
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    a_dev = jnp.asarray(a.tiles)
+    b_dev = jnp.asarray(b.tiles)
+    if use_kernel:
+        out = bsr_spgemm_pallas(
+            a_dev, b_dev,
+            jnp.asarray(sched.a_slot), jnp.asarray(sched.b_slot),
+            jnp.asarray(sched.c_slot), jnp.asarray(schedule_flags(sched)),
+            nprod=sched.nprod, nc=sched.nc, bs=bs, interpret=interpret)
+    else:
+        out = bsr_spgemm_ref(
+            a_dev, b_dev,
+            jnp.asarray(sched.a_slot), jnp.asarray(sched.b_slot),
+            jnp.asarray(sched.c_slot), nc=sched.nc)
+    return BlockSparse(
+        tiles=np.asarray(out),
+        tile_rows=sched.c_rows,
+        tile_cols=sched.c_cols,
+        shape=(a.shape[0], b.shape[1]),
+        orig_shape=(a.orig_shape[0], b.orig_shape[1]),
+        bs=bs,
+    )

@@ -1,0 +1,82 @@
+"""Flash-style chunked attention in pure jnp — the kernel's XLA stand-in.
+
+The Pallas kernel cannot lower on the CPU dry-run backend, but the ref
+implementation materializes the full S×S logit tensor — wildly wrong
+memory profile for roofline purposes. This implementation is the same
+online-softmax recurrence as the kernel, expressed as a ``lax.scan`` over
+key/value chunks with a ``jax.checkpoint``ed body:
+
+  * forward peak = one (S, chunk) logit tile per (batch, head) — flash-like;
+  * backward recomputes each chunk (flash-backward-like flops);
+  * ``unroll=True`` removes the while loop so ``cost_analysis()`` (which
+    counts loop bodies once) reports exact flops/bytes for the dry-run's
+    cost-extraction lowerings.
+
+Layout note: operands stay UNFOLDED as (B, S, H, D). Folding (B, H) into
+one axis (as the Pallas kernel does for its grid) forces a reshape that
+merges the data-sharded batch dim with the model-sharded head dim — GSPMD
+cannot propagate through that merge and silently replicates the attention
+compute (measured 8.7× flops blow-up on the 16×16 mesh). Keeping the dims
+separate lets batch shard over 'data' and heads over 'model' cleanly.
+
+Numerically identical to ``attention_ref`` (same masking/softcap
+semantics), asserted by the kernel test sweep.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_chunked"]
+
+NEG_INF = -1e30
+
+
+def attention_chunked(q, k, v, *, scale: float = 1.0, causal: bool = True,
+                      window: int = 0, softcap: float = 0.0,
+                      chunk: int = 1024, unroll: bool = False):
+    """q, k, v: (B, S, H, D), heads already matched (GQA pre-repeated).
+
+    Returns (B, S, H, D). S % chunk must be 0 (caller pads).
+    """
+    b, s, h, d = q.shape
+    assert k.shape == (b, s, h, d), (q.shape, k.shape)
+    chunk = min(chunk, s)
+    nk = s // chunk
+    qf = q.astype(jnp.float32) * scale
+    rows = jnp.arange(s)
+
+    def body(carry, xs):
+        m, l, acc = carry                      # (B,H,S), (B,H,S), (B,S,H,D)
+        kc, vc, k_lo = xs                      # (B,C,H,D) ×2, ()
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kc.astype(jnp.float32))
+        if softcap > 0.0:
+            logits = softcap * jnp.tanh(logits / softcap)
+        cols = k_lo + jnp.arange(chunk)
+        mask = jnp.ones((s, chunk), bool)
+        if causal:
+            mask &= cols[None, :] <= rows[:, None]
+        if window > 0:
+            mask &= cols[None, :] > rows[:, None] - window
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(-1))
+        p = jnp.exp(logits - m_new[..., None])
+        p = jnp.where(mask[None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)             # (B,H,S)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhqk,bkhd->bqhd", p, vc.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, h, s), NEG_INF, jnp.float32),
+            jnp.zeros((b, h, s), jnp.float32),
+            jnp.zeros((b, s, h, d), jnp.float32))
+    ks = k.reshape(b, nk, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, chunk, h, d).transpose(1, 0, 2, 3, 4)
+    los = jnp.arange(nk) * chunk
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), init, (ks, vs, los),
+        unroll=nk if unroll else 1)
+    l_safe = jnp.where(l == 0.0, 1.0, l).transpose(0, 2, 1)  # (B,S,H)
+    return (acc / l_safe[..., None]).astype(q.dtype)

@@ -1,0 +1,144 @@
+"""Pallas TPU flash attention (forward) — causal, sliding-window, softcap.
+
+Covers every attention variant in the assigned architecture pool:
+
+  * causal LM attention (all archs)
+  * GQA — handled by the wrapper (`ops.py`) which folds query-head groups
+    into the batch dimension; the kernel itself sees matched q/kv heads
+  * sliding-window masking (gemma2 local layers, mistral-family)
+  * logit soft-capping ``softcap * tanh(logits / softcap)`` (gemma2)
+
+Layout/tiling: grid is ``(bh, nq, nk)`` with the kv dimension innermost so
+the online-softmax state (running max ``m``, normalizer ``l``, accumulator)
+lives in VMEM scratch across kv steps. Q blocks of 128 rows match the MXU;
+kv blocks of 128 keep the ``(128, 128)`` logit tile square. Fully-masked kv
+blocks (above the causal diagonal, or outside the sliding window) are
+skipped with ``pl.when`` — on TPU the bandwidth for their K/V tiles is still
+spent (the BlockSpec pipeline fetches them) but no MXU work is issued; the
+wrapper additionally clamps the kv grid to the causal frontier when the
+whole call is causal, so the skipped region is at most one block diagonal.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref,
+                 m_ref, l_ref, acc_ref,
+                 *, scale: float, causal: bool, window: int,
+                 softcap: float, bq: int, bk: int, nk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_lo = qi * bq
+    k_lo = ki * bk
+    # block-level reachability: skip blocks that are fully masked
+    reachable = True
+    if causal:
+        reachable = (k_lo <= q_lo + bq - 1)
+    if window > 0:
+        # q attends to [q - window + 1, q]; block dead if k_hi < q_lo - window + 1
+        reachable = jnp.logical_and(
+            reachable, (k_lo + bk - 1 >= q_lo - window + 1)) \
+            if causal else reachable
+
+    @pl.when(reachable)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        rows = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        cols = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, cols <= rows)
+        if window > 0:
+            mask = jnp.logical_and(mask, cols > rows - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                        # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # guard fully-masked rows (all NEG_INF) from exp overflow to nan
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / l_safe).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "softcap",
+                     "bq", "bk", "interpret"))
+def flash_attention_pallas(q, k, v, *, scale: float = 1.0,
+                           causal: bool = True, window: int = 0,
+                           softcap: float = 0.0,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False):
+    """q, k, v: (BH, S, D) with matched heads (GQA folded by the wrapper).
+
+    Returns (BH, S, D) in q.dtype. S must divide by bq and bk; the wrapper
+    pads. ``window`` is the sliding-window width in tokens (0 = full).
+    """
+    bh, s, d = q.shape
+    assert k.shape == (bh, s, d) and v.shape == (bh, s, d)
+    bq = min(bq, s)
+    bk = min(bk, s)
+    nq = s // bq
+    nk = s // bk
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, bq=bq, bk=bk, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

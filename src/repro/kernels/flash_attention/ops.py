@@ -1,0 +1,88 @@
+"""Model-facing attention op: GQA folding, padding, kernel/ref dispatch.
+
+``multihead_attention`` takes model-layout tensors
+
+    q: (B, S, Hq, D)   k, v: (B, S, Hkv, D)
+
+repeats kv heads up to the query head count (GQA), folds (B, H) into one
+leading axis, pads S to the block size, and calls the Pallas kernel (or the
+jnp reference on CPU / under ``use_kernel=False``). Custom VJP: the forward
+is the kernel, the backward re-materializes through the reference (the
+standard trick while a bwd kernel is not yet written — correctness first,
+and the fwd kernel is where serving time goes).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .chunked import attention_chunked
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["multihead_attention", "fold_gqa"]
+
+
+def fold_gqa(q, k, v):
+    """(B,S,H,D) -> (B*H, S, D) with kv repeated to Hq."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    return fold(q), fold(k), fold(v)
+
+
+@functools.partial(
+    jax.custom_vjp,
+    nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def multihead_attention(q, k, v, scale: float, causal: bool, window: int,
+                        softcap: float, use_kernel: bool, interpret: bool):
+    return _mha_fwd(q, k, v, scale, causal, window, softcap,
+                    use_kernel, interpret)[0]
+
+
+def _mha_fwd(q, k, v, scale, causal, window, softcap, use_kernel, interpret):
+    b, s, hq, d = q.shape
+    qf, kf, vf = fold_gqa(q, k, v)
+    if use_kernel:
+        # pad S to a 128 multiple for block tiling
+        pad = (-s) % 128
+        if pad:
+            qf = jnp.pad(qf, ((0, 0), (0, pad), (0, 0)))
+            kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0)))
+            vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0)))
+        out = flash_attention_pallas(
+            qf, kf, vf, scale=scale, causal=causal, window=window,
+            softcap=softcap, interpret=interpret)
+        out = out[:, :s]
+    else:
+        out = attention_ref(qf, kf, vf, scale=scale, causal=causal,
+                            window=window, softcap=softcap)
+    out = out.reshape(b, hq, s, d).transpose(0, 2, 1, 3)
+    return out, (q, k, v)
+
+
+def _mha_bwd(scale, causal, window, softcap, use_kernel, interpret,
+             res, g):
+    q, k, v = res
+
+    def f(q, k, v):
+        hq, hkv = q.shape[2], k.shape[2]
+        if hkv != hq:
+            k = jnp.repeat(k, hq // hkv, axis=2)
+            v = jnp.repeat(v, hq // hkv, axis=2)
+        return attention_chunked(q, k, v, scale=scale, causal=causal,
+                                 window=window, softcap=softcap)
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+multihead_attention.defvjp(_mha_fwd, _mha_bwd)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash attention (materializes the full logit matrix)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, scale: float = 1.0, causal: bool = True,
+                  window: int = 0, softcap: float = 0.0):
+    """q, k, v: (BH, S, D); returns (BH, S, D)."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    S = q.shape[1]
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), dtype=bool)
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[None], p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(denom == 0.0, 1.0, denom)
+    return jnp.einsum("bqk,bkd->bqd", p, vf).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .kernel import moe_gemm_pallas
+from .ops import grouped_gemm
+from .ref import moe_gemm_ref

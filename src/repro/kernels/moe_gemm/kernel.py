@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: grouped expert GEMM over capacity-bucketed tokens.
+
+This is the compute half of the SpGEMM-framed MoE dispatch (DESIGN.md §3).
+After the router's sparse token→expert matrix is capacity-bucketed (the
+block-fetch strategy: whole fixed-size buckets move, bounded over-fetch),
+the expert FFN is a *grouped* GEMM:
+
+    y[e, c, :] = x[e, c, :] @ w[e, :, :]      e = expert, c = capacity slot
+
+Grid ``(E, cap/bt, f/bf, d/bd)`` — the expert axis is the group; each
+expert's weight tile streams once per (m, n) tile pair and the f32
+accumulator lives in VMEM scratch across the contraction steps. Weights are
+stationary per expert block, matching the paper's "B and C stationary, A
+moves" 1D layout (tokens are A).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["moe_gemm_pallas"]
+
+
+def _kernel(x_ref, w_ref, y_ref, acc_ref, *, nd: int):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(di == nd - 1)
+    def _flush():
+        y_ref[0] = acc_ref[...].astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bt", "bf", "bd", "interpret"))
+def moe_gemm_pallas(x, w, *, bt: int = 128, bf: int = 128, bd: int = 512,
+                    interpret: bool = False):
+    """x: (E, cap, d), w: (E, d, f) -> y: (E, cap, f).
+
+    Block sizes clamp to the actual dims; cap/d/f must divide by the
+    (clamped) blocks — the ops wrapper pads.
+    """
+    e, cap, d = x.shape
+    _, _, f = w.shape
+    bt = min(bt, cap)
+    bf = min(bf, f)
+    bd = min(bd, d)
+    nd = d // bd
+
+    kernel = functools.partial(_kernel, nd=nd)
+    return pl.pallas_call(
+        kernel,
+        grid=(e, cap // bt, f // bf, nd),
+        in_specs=[
+            pl.BlockSpec((1, bt, bd), lambda e, m, n, k: (e, m, k)),
+            pl.BlockSpec((1, bd, bf), lambda e, m, n, k: (e, k, n)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, bf), lambda e, m, n, k: (e, m, n)),
+        out_shape=jax.ShapeDtypeStruct((e, cap, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bt, bf), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(x, w)

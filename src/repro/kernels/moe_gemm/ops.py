@@ -1,0 +1,44 @@
+"""Grouped expert GEMM op with padding + kernel/ref dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import moe_gemm_pallas
+from .ref import moe_gemm_ref
+
+__all__ = ["grouped_gemm"]
+
+
+def grouped_gemm(x, w, *, use_kernel: bool = True,
+                 interpret: bool = True):
+    """x: (E, cap, d), w: (E, d, f) -> (E, cap, f), padding dims to the
+    kernel's block multiples. Differentiable (kernel fwd, einsum bwd)."""
+    if not use_kernel:
+        return moe_gemm_ref(x, w)
+
+    @jax.custom_vjp
+    def _op(x, w):
+        e, cap, d = x.shape
+        f = w.shape[2]
+        pc, pd, pf = (-cap) % 128, (-d) % 128, (-f) % 128
+        xp = jnp.pad(x, ((0, 0), (0, pc), (0, pd)))
+        wp = jnp.pad(w, ((0, 0), (0, pd), (0, pf)))
+        y = moe_gemm_pallas(xp, wp, interpret=interpret)
+        return y[:, :cap, :f]
+
+    def _fwd(x, w):
+        return _op(x, w), (x, w)
+
+    def _bwd(res, g):
+        x, w = res
+        gf = g.astype(jnp.float32)
+        dx = jnp.einsum("ecf,edf->ecd", gf,
+                        w.astype(jnp.float32)).astype(x.dtype)
+        dw = jnp.einsum("ecd,ecf->edf", x.astype(jnp.float32),
+                        gf).astype(w.dtype)
+        return dx, dw
+
+    _op.defvjp(_fwd, _bwd)
+    return _op(x, w)

@@ -1,0 +1,5 @@
+"""Launchers: production mesh builders, dry-run/roofline, train/serve CLIs.
+
+NOTE: import ``dryrun`` only as __main__ (it sets XLA_FLAGS at import).
+"""
+from .mesh import make_local_mesh, make_production_mesh

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above run before ANY other import — jax locks the device
+count at first init, and the production meshes need 512 placeholder
+devices. Do not fold this env setup into conftest/pyproject: smoke tests
+and benches must keep seeing one device.
+
+Per cell this driver produces:
+
+  * the ARTIFACT lowering — full config, scan-over-layers, exactly what a
+    deployment would run. Sharding bugs, OOM-at-compile and unsupported
+    collectives fail HERE (that is the point of the dry-run). Its
+    ``memory_analysis()`` is the reported footprint.
+  * two COST lowerings — 1-period and 2-period variants with every scan
+    unrolled. XLA's ``cost_analysis()`` counts while-loop bodies ONCE, so
+    flops/bytes/collective-bytes from a scanned model under-count by the
+    trip count; the unrolled variants are loop-free and therefore exact,
+    and since period bodies are structurally identical the full-model cost
+    is the affine extrapolation  F(n) = F(1) + (n-1)·(F(2) - F(1)).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--out experiments/dryrun]
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from ..configs import SHAPES, get_config, list_archs
+from ..sharding import ShardingRules, use_rules
+from ..train import AdamWConfig, make_decode_step, make_prefill_step, \
+    make_train_step
+from .mesh import make_production_mesh
+from .roofline import (HW, Roofline, bytes_model, collective_bytes_from_hlo,
+                       model_flops)
+from .specs import batch_specs, cache_specs, state_specs
+
+
+def _lower(cfg, shape, mesh, rules, opts):
+    """Lower one step function for ``cfg`` on ``mesh``; returns Lowered."""
+    with use_rules(rules):
+        if shape.kind == "train":
+            step = make_train_step(
+                cfg, AdamWConfig(), use_kernel=False, interpret=True,
+                microbatches=opts.get("microbatches", 1))
+            state_sds, state_shardings = state_specs(cfg, mesh, rules)
+            batch_sds = batch_specs(cfg, shape, mesh, rules)
+            jitted = jax.jit(step, in_shardings=(state_shardings, None),
+                             out_shardings=(state_shardings, None))
+            with mesh:
+                return jitted.lower(state_sds, batch_sds)
+        maker = make_prefill_step if shape.kind == "prefill" \
+            else make_decode_step
+        step = maker(cfg, use_kernel=False, interpret=True)
+        param_sds, param_shardings = state_specs(
+            cfg, mesh, rules, with_opt=False)
+        batch_sds = batch_specs(cfg, shape, mesh, rules)
+        cache_sds = cache_specs(cfg, shape, mesh, rules)
+        jitted = jax.jit(step, in_shardings=(param_shardings, None, None))
+        with mesh:
+            return jitted.lower(param_sds, batch_sds, cache_sds)
+
+
+def _costs(compiled):
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            coll)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               opts: dict | None = None, verbose: bool = True,
+               cfg_override=None):
+    """Dry-run one cell; returns (record dict, artifact compiled)."""
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    opts = opts or {}
+    if opts.get("remat"):
+        cfg = dataclasses.replace(cfg, remat=opts["remat"])
+    if opts.get("attn_chunk"):
+        cfg = dataclasses.replace(cfg, attn_chunk=opts["attn_chunk"])
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped",
+                "reason": "full-attention arch; long_500k needs "
+                          "sub-quadratic mixing (DESIGN.md §5)"}, None
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rules = ShardingRules.for_mesh(mesh,
+                                   profile=opts.get("profile", "default"))
+
+    # ---- artifact lowering (memory + proof-of-compile) ---------------------
+    t0 = time.perf_counter()
+    lowered = _lower(cfg, shape, mesh, rules, opts)
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "peak_memory_in_bytes", 0) or 0)
+        if not mem:
+            mem = (float(getattr(ma, "temp_size_in_bytes", 0)) +
+                   float(getattr(ma, "argument_size_in_bytes", 0)) +
+                   float(getattr(ma, "output_size_in_bytes", 0)))
+    except Exception:
+        pass
+
+    # ---- cost lowerings: unrolled 1-period / 2-period extrapolation --------
+    plen = len(cfg.pattern)
+    n_periods = cfg.n_periods
+    costs = []
+    for periods in (1, 2):
+        cfg_k = dataclasses.replace(
+            cfg, n_layers=periods * plen,
+            unroll_layers=True, unroll_inner=True)
+        comp_k = _lower(cfg_k, shape, mesh, rules, opts).compile()
+        costs.append(_costs(comp_k))
+    (f1, b1, c1), (f2, b2, c2) = costs
+    fb, bb = max(f2 - f1, 0.0), max(b2 - b1, 0.0)
+    flops = f1 + (n_periods - 1) * fb
+    bytes_hlo = b1 + (n_periods - 1) * bb
+    coll = {k: c1[k] + (n_periods - 1) * max(c2[k] - c1[k], 0)
+            for k in c1}
+    byts = bytes_model(cfg, shape, tp=rules.tp_size,
+                       batch_shards=rules.batch_size, chips=chips)
+
+    rf = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts, bytes_hlo=bytes_hlo,
+        coll_bytes_per_device=float(coll["total"]), coll_breakdown=coll,
+        t_compute=flops / HW["peak_flops"],
+        t_memory=byts / HW["hbm_bw"],
+        t_collective=coll["total"] / HW["ici_bw"],
+        model_flops=model_flops(cfg, shape),
+        peak_memory_bytes=mem)
+
+    record = {"status": "ok", **rf.row(),
+              "profile": opts.get("profile", "default"),
+              "t_lower_s": round(t_lower, 2),
+              "t_compile_s": round(t_compile, 2),
+              "coll_breakdown": {k: int(v) for k, v in coll.items()}}
+    if verbose:
+        try:
+            print(compiled.memory_analysis())
+        except Exception as e:  # pragma: no cover
+            print("memory_analysis unavailable:", e)
+        print(json.dumps(record, indent=2, default=float))
+    return record, compiled
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--profile", default="default",
+                    choices=["default", "dp_only", "serve_tp",
+                             "ep_sharded", "ep_dp"])
+    ap.add_argument("--remat", default=None,
+                    choices=["none", "block", "dots"])
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    archs = list_archs() if args.all else [args.arch]
+    shapes = list(SHAPES) if args.all else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+    cells = [(a, s, mp) for a in archs for s in shapes for mp in meshes]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for a, s, mp in cells:
+        tag = f"{a}__{s}__{'multi' if mp else 'single'}"
+        if args.profile != "default":
+            tag += f"__{args.profile}"
+        if args.remat:
+            tag += f"__remat-{args.remat}"
+        if args.attn_chunk:
+            tag += f"__ac{args.attn_chunk}"
+        print(f"=== {tag} ===", flush=True)
+        t0 = time.perf_counter()
+        try:
+            record, _ = lower_cell(
+                a, s, multi_pod=mp,
+                opts={"microbatches": args.microbatches,
+                      "profile": args.profile, "remat": args.remat,
+                      "attn_chunk": args.attn_chunk},
+                verbose=not args.all)
+        except Exception as e:
+            failures += 1
+            record = {"arch": a, "shape": s,
+                      "mesh": "2x16x16" if mp else "16x16",
+                      "status": "FAILED", "error": repr(e)}
+            traceback.print_exc()
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(record, f, indent=2, default=float)
+        print(f"--- {tag}: {record['status']} "
+              f"({time.perf_counter() - t0:.1f}s)", flush=True)
+    print(f"done: {len(cells) - failures}/{len(cells)} cells ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

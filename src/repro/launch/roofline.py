@@ -1,0 +1,263 @@
+"""Roofline terms from a compiled dry-run artifact (no hardware needed).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs            / (chips × 197 TF/s bf16)
+    memory     = HLO_bytes_accessed   / (chips × 819 GB/s HBM)
+    collective = collective_bytes     / (chips × 50 GB/s ICI-link)
+
+``cost_analysis()`` on the SPMD-partitioned executable reports *per-device*
+flops/bytes, so we multiply by the chip count for the global numerators and
+the division brings it back to per-chip time — equivalently: term =
+per-device quantity / per-chip rate. Collective bytes are not in
+cost_analysis; we parse the post-SPMD HLO text and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (these shapes are already per-device). The dominant
+term is the bottleneck the §Perf loop iterates on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+__all__ = ["HW", "Roofline", "collective_bytes_from_hlo", "analyze",
+           "model_flops", "bytes_model"]
+
+# TPU v5e per chip
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+HW = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# e.g. "bf16[16,256,128]{2,1,0}" — capture dtype + dims
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum output-operand bytes of every collective op, by kind.
+
+    HLO lines look like:
+      ``%ag = bf16[16,512]{1,0} all-gather(%x), replica_groups=...``
+    The lhs shape is the op's (per-device) output; for all-gather /
+    all-to-all this is what lands on the wire per device; for all-reduce
+    we count the full operand (ring all-reduce moves ~2× — noted in
+    EXPERIMENTS.md; we report raw operand bytes like the paper reports
+    communication volume).
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # match "<lhs> = <shape...> <op>(" — op may have suffix "-start"
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", stripped)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        base = None
+        for c in _COLLECTIVE_OPS:
+            if op == c or op == c + "-start" or op == c + "-done":
+                base = c
+                break
+        if base is None or op.endswith("-done"):
+            continue
+        out[base] += _shape_bytes(shape_str)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVE_OPS)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device quantities
+    flops_per_device: float
+    bytes_per_device: float          # analytic HBM model (see bytes_model)
+    coll_bytes_per_device: float
+    coll_breakdown: Dict[str, int]
+    # terms (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    # usefulness
+    model_flops: float            # 6ND (train) / 2ND (inference), global
+    peak_memory_bytes: Optional[float] = None
+    bytes_hlo: float = 0.0        # raw cost_analysis (CPU-unfused, diag)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achieved fraction of the compute roofline: time the *useful*
+        (model) flops would take at peak, over the bound time."""
+        if self.bound_time == 0:
+            return 0.0
+        t_useful = self.model_flops / (self.chips * PEAK_FLOPS)
+        return t_useful / self.bound_time
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_dev": self.flops_per_device,
+            "bytes_dev": self.bytes_per_device,
+            "bytes_hlo_dev": self.bytes_hlo,
+            "coll_dev": self.coll_bytes_per_device,
+            "t_compute_ms": self.t_compute * 1e3,
+            "t_memory_ms": self.t_memory * 1e3,
+            "t_collective_ms": self.t_collective * 1e3,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_frac": self.roofline_fraction,
+            "peak_memory_gb": (self.peak_memory_bytes or 0) / 2**30,
+        }
+
+
+def bytes_model(cfg, shape, *, tp: int = 16, batch_shards: int = 16,
+                chips: int = 256) -> float:
+    """Analytic per-device HBM traffic model (bytes per step).
+
+    ``cost_analysis()['bytes accessed']`` on the XLA:CPU backend charges
+    every unfused intermediate (CPU fuses far less than TPU), inflating the
+    memory term by >100× — e.g. flash-attention logit tiles that live in
+    VMEM/registers on TPU are counted as HBM round-trips. The reported
+    memory *term* therefore uses this napkin model of what actually
+    transits TPU HBM; the raw HLO bytes stay in the record as
+    ``bytes_hlo`` for transparency. Terms:
+
+      weights   : fwd (+ remat re-read + bwd) passes over the TP shard, bf16
+      optimizer : AdamW on the FSDP shard — p,g,m,v reads + p,m,v writes, f32
+      grads     : produce + reduce read of the TP grad shard, f32
+      activs    : c_act passes of (tokens_dev × d_model) per layer, bf16
+                  (c_act ≈ 8 fwd, ×2.5 with remat+bwd for training)
+      logits    : chunked-CE logit tiles, f32 write+read (+bwd recompute)
+      kv_cache  : decode reads the seq-sharded cache once per step; prefill
+                  writes it once; GQA repeat charged at query-head width
+      q_stream  : chunked attention re-reads Q once per kv chunk
+    """
+    n_active = cfg.active_param_count()
+    n_total = cfg.param_count()
+    is_train = shape.kind == "train"
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    bsh = batch_shards if shape.global_batch % batch_shards == 0 else 1
+    t_dev = tokens / bsh
+    d = cfg.d_model
+
+    n_tp = n_total / tp
+    weights = (3 if is_train else 1) * 2.0 * n_tp
+    opt = 32.0 * (n_total / chips) if is_train else 0.0
+    grads = 8.0 * (n_total / tp) if is_train else 0.0
+
+    c_act = 20.0 if is_train else 8.0
+    activs = c_act * t_dev * d * 2.0 * cfg.n_layers
+
+    logits = (12.0 if is_train else 4.0) * t_dev * (cfg.vocab / tp)
+
+    n_attn = sum(1 for k in cfg.pattern if k in "aAl") * cfg.n_periods
+    kv = 0.0
+    q_stream = 0.0
+    if n_attn and cfg.has_attention:
+        hkv_w = cfg.n_kv_heads * cfg.hd
+        if shape.kind == "decode":
+            # grouped-GQA decode reads the (seq-sharded) cache once at
+            # KV-head width (attention.py:attn_decode — no repeat)
+            kv = (shape.global_batch * shape.seq_len *
+                  hkv_w * 2.0 / max(bsh, 1) / tp) * n_attn
+        else:
+            kv = t_dev * hkv_w * 2.0 * n_attn            # write once
+            nk = max(shape.seq_len // cfg.attn_chunk, 1)
+            q_stream = (t_dev * cfg.n_heads * cfg.hd * 2.0 * nk
+                        * (2.5 if is_train else 1.0) * n_attn / tp)
+
+    return weights + opt + grads + activs + logits + kv + q_stream
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D for training, 2·N·D forward-only; N = active params."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze(compiled, cfg, shape_cfg, mesh_name: str, chips: int,
+            arch: str) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "peak_memory_in_bytes", None) or
+                    getattr(ma, "temp_size_in_bytes", 0) +
+                    getattr(ma, "argument_size_in_bytes", 0) +
+                    getattr(ma, "output_size_in_bytes", 0))
+    except Exception:
+        pass
+
+    return Roofline(
+        arch=arch, shape=shape_cfg.name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        coll_bytes_per_device=float(coll["total"]),
+        coll_breakdown=coll,
+        t_compute=flops / PEAK_FLOPS,
+        t_memory=byts / HBM_BW,
+        t_collective=coll["total"] / ICI_BW,
+        model_flops=model_flops(cfg, shape_cfg),
+        peak_memory_bytes=mem,
+    )

@@ -1,0 +1,140 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+``input_specs`` returns the exact pytrees the step functions take, as
+ShapeDtypeStructs (no allocation), with NamedShardings attached where the
+launcher needs them for ``jax.jit(..., in_shardings=...)``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import init_caches, init_params
+from ..models.attention import KVCache
+from ..models.mamba2 import SSMState
+from ..sharding import ShardingRules, param_pspecs
+from ..train import AdamWConfig, init_train_state
+
+__all__ = ["batch_specs", "cache_specs", "state_specs", "cache_pspecs",
+           "batch_pspecs"]
+
+
+def _sds(shape, dtype, mesh: Optional[Mesh], spec: Optional[P]):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig,
+                 rules: ShardingRules) -> Dict[str, P]:
+    # batch sharded over (pod, data) when divisible, else replicated
+    # (long_500k has global_batch=1: model+sequence parallelism only)
+    divisible = rules.batch and \
+        shape.global_batch % max(rules.batch_size, 1) == 0
+    batch_ax: Any = rules.batch if divisible else None
+    out = {}
+    if cfg.input_kind == "embeds":
+        out["embeds"] = P(batch_ax, None, None)
+    else:
+        out["tokens"] = P(batch_ax, None)
+    if shape.kind == "train":
+        out["labels"] = P(batch_ax, None)
+    return out
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                mesh: Optional[Mesh] = None,
+                rules: Optional[ShardingRules] = None) -> Dict[str, Any]:
+    gb = shape.global_batch
+    seq = shape.seq_len if shape.kind != "decode" else 1
+    specs = batch_pspecs(cfg, shape, rules) if rules else None
+
+    def spec_of(name, default):
+        return specs[name] if specs else default
+
+    out: Dict[str, Any] = {}
+    if cfg.input_kind == "embeds":
+        out["embeds"] = _sds((gb, seq, cfg.d_model), jnp.bfloat16, mesh,
+                             spec_of("embeds", None))
+    else:
+        out["tokens"] = _sds((gb, seq), jnp.int32, mesh,
+                             spec_of("tokens", None))
+    if shape.kind == "train":
+        out["labels"] = _sds((gb, seq), jnp.int32, mesh,
+                             spec_of("labels", None))
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig,
+                 rules: ShardingRules):
+    """Sharding for decode caches: KV batch over data, *seq over model*
+    (SP — this is what makes 500k-token caches fit and parallelizes the
+    attention reduction, flash-decoding style). Mamba states: batch over
+    data, heads over model when divisible."""
+    batch_ax = rules.batch if rules.batch and \
+        shape.global_batch % max(rules.batch_size, 1) == 0 else None
+
+    def per_kind(kind: str):
+        if kind in "aAl":
+            return KVCache(
+                k=P(None, batch_ax, rules.sp, None, None),
+                v=P(None, batch_ax, rules.sp, None, None),
+                length=P(None))
+        nh = cfg.ssm.n_heads(cfg.d_model)
+        head_ax = rules.tp if nh % max(rules.tp_size, 1) == 0 else None
+        return SSMState(conv=P(None, batch_ax, None, None),
+                        ssm=P(None, batch_ax, head_ax, None, None))
+
+    return {f"pos{i}": per_kind(k) for i, k in enumerate(cfg.pattern)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig,
+                mesh: Optional[Mesh] = None,
+                rules: Optional[ShardingRules] = None):
+    """ShapeDtypeStruct pytree of the decode caches."""
+    caches = jax.eval_shape(
+        lambda: init_caches(cfg, shape.global_batch, shape.seq_len))
+    if mesh is None or rules is None:
+        return caches
+    pspecs = cache_pspecs(cfg, shape, rules)
+
+    def attach(sds_tree, spec_tree):
+        return jax.tree.map(
+            lambda s, p: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+            sds_tree, spec_tree,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    return {k: attach(caches[k], pspecs[k]) for k in caches}
+
+
+def state_specs(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+                rules: Optional[ShardingRules] = None,
+                with_opt: bool = True):
+    """(specs, shardings) for params or full TrainState via eval_shape."""
+    if with_opt:
+        shape_tree = jax.eval_shape(
+            lambda: init_train_state(
+                cfg, init_params(cfg, jax.random.PRNGKey(0),
+                                 dtype=jnp.dtype(cfg.param_dtype))))
+    else:
+        shape_tree = jax.eval_shape(
+            lambda: init_params(cfg, jax.random.PRNGKey(0),
+                                dtype=jnp.dtype(cfg.param_dtype)))
+    if mesh is None or rules is None:
+        return shape_tree, None
+    pspec_tree = param_pspecs(shape_tree, rules)
+    shardings = jax.tree.map(
+        lambda p: NamedSharding(mesh, p), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+    specs = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shape_tree, shardings)
+    return specs, shardings

@@ -1,0 +1,78 @@
+"""Training launcher CLI.
+
+Runs real steps on the available devices (CPU here; the same code path
+jit-lowers for the production mesh in dryrun.py). Smoke-scale by default:
+
+  python -m repro.launch.train --arch qwen3-8b --smoke --steps 20
+
+Features exercised: sharded synthetic data pipeline, AdamW + cosine,
+mixed precision, remat, checkpoint/restart (auto-resume), straggler
+stats, optional int8 gradient compression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import SHAPES, get_config, list_archs, smoke_config
+from ..data import SyntheticLMDataset
+from ..runtime import TrainLoopRunner
+from ..train import AdamWConfig, init_train_state, make_train_step
+from ..models import init_params
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"arch={cfg.name} layers={cfg.n_layers} d={cfg.d_model} "
+          f"params={cfg.param_count()/1e6:.1f}M")
+
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 10, 1))
+    step_fn = jax.jit(make_train_step(
+        cfg, opt_cfg, use_kernel=False, interpret=True,
+        compress_grads=args.compress_grads,
+        microbatches=args.microbatches))
+    state = init_train_state(cfg, params, compress=args.compress_grads)
+
+    ds = SyntheticLMDataset(cfg.vocab, args.seq, args.batch,
+                            seed=args.seed, input_kind=cfg.input_kind,
+                            d_model=cfg.d_model)
+
+    def batches(step):
+        return {k: jnp.asarray(v) for k, v in ds.batch(step).items()}
+
+    def log(step, metrics):
+        print(json.dumps({"step": step, **{k: round(v, 4)
+                                           for k, v in metrics.items()}}))
+
+    runner = TrainLoopRunner(step_fn, state, args.ckpt_dir,
+                             ckpt_every=args.ckpt_every)
+    runner.run(batches, args.steps, log_every=5, log_fn=log)
+    print("done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,13 @@
+"""Model zoo: functional LM supporting the 10 assigned architectures.
+
+layers.py      norms, RoPE, MLP variants (swiglu/geglu/relu2)
+attention.py   GQA + qk-norm + softcap + sliding window; train/prefill/decode
+mamba2.py      SSD chunked scan + O(1) decode recurrence
+moe.py         SpGEMM-framed expert dispatch (the paper's technique as EP)
+blocks.py      pattern kinds: 'a' attn+MLP, 'A' attn+MoE, 'l' local-attn+MLP,
+               'm' mamba+MLP, 'M' mamba+MoE
+transformer.py scan-over-periods LM: loss_fn / prefill_step / decode_step
+"""
+
+from .transformer import (decode_step, init_caches, init_params, loss_fn,
+                          prefill_step, train_logits)

@@ -1,0 +1,164 @@
+"""Attention layer: GQA projections, RoPE, qk-norm, flash kernel, KV cache.
+
+Three execution paths share one parameter set:
+
+  * ``attn_train``   — full-sequence causal attention through the Pallas
+    flash kernel (or jnp ref on CPU).
+  * ``attn_prefill`` — same math, but also returns the populated KV cache.
+  * ``attn_decode``  — one query token against a (possibly sequence-
+    sharded) KV cache; plain jnp math so GSPMD can insert the
+    flash-decoding-style partial-softmax reductions when the cache's seq
+    axis is sharded (SP over 'model').
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels.flash_attention import multihead_attention
+from ..kernels.flash_attention.chunked import attention_chunked
+from ..kernels.flash_attention.ops import fold_gqa
+from ..sharding import shard
+from .layers import dense_init, rmsnorm, rmsnorm_init, rope, softcap
+
+__all__ = ["attn_init", "attn_train", "attn_prefill", "attn_decode",
+           "KVCache", "init_kv_cache"]
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, Hkv, hd)
+    v: jax.Array
+    length: jax.Array     # () int32 — tokens currently valid
+
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, nq, dtype),
+        "wk": dense_init(ks[1], d, nkv, dtype),
+        "wv": dense_init(ks[2], d, nkv, dtype),
+        "wo": dense_init(ks[3], nq, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = rmsnorm_init(hd, dtype)
+        p["knorm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, x, positions):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = (x @ params["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ params["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ params["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(params["qnorm"], q, cfg.norm_eps)
+        k = rmsnorm(params["knorm"], k, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attend(q, k, v, cfg: ModelConfig, window: int,
+            use_kernel: bool, interpret: bool):
+    """(B,S,H,D) attention; Pallas kernel or flash-style chunked jnp."""
+    b, s, hq, d = q.shape
+    if use_kernel:
+        return multihead_attention(
+            q, k, v, cfg.hd ** -0.5, True, window, cfg.attn_softcap,
+            True, interpret)
+    rep = hq // k.shape[2]
+    if rep > 1:
+        k = shard(jnp.repeat(k, rep, axis=2), "batch", None, "tp", None)
+        v = shard(jnp.repeat(v, rep, axis=2), "batch", None, "tp", None)
+    return attention_chunked(
+        q, k, v, scale=cfg.hd ** -0.5, causal=True, window=window,
+        softcap=cfg.attn_softcap, chunk=cfg.attn_chunk,
+        unroll=cfg.unroll_inner)
+
+
+def attn_train(params, cfg: ModelConfig, x, *, window: int = 0,
+               use_kernel: bool = True, interpret: bool = True):
+    """x: (B, S, d) -> (B, S, d); full causal self-attention."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    q = shard(q, "batch", None, "tp", None)
+    out = _attend(q, k, v, cfg, window, use_kernel, interpret)
+    out = out.reshape(b, s, cfg.n_heads * cfg.hd)
+    return out @ params["wo"]
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def attn_prefill(params, cfg: ModelConfig, x, cache: KVCache, *,
+                 window: int = 0, use_kernel: bool = True,
+                 interpret: bool = True) -> Tuple[jax.Array, KVCache]:
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = _attend(q, k, v, cfg, window, use_kernel, interpret)
+    out = out.reshape(b, s, cfg.n_heads * cfg.hd) @ params["wo"]
+    new_cache = KVCache(
+        k=jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k.astype(cache.k.dtype), 0, axis=1),
+        v=jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v.astype(cache.v.dtype), 0, axis=1),
+        length=jnp.asarray(s, jnp.int32))
+    return out, new_cache
+
+
+def attn_decode(params, cfg: ModelConfig, x, cache: KVCache, *,
+                window: int = 0) -> Tuple[jax.Array, KVCache]:
+    """x: (B, 1, d) one new token; cache seq axis may be SP-sharded.
+
+    GQA is computed *grouped* — q reshaped to (B, 1, Hkv, rep, hd) and
+    contracted against the (B, S, Hkv, hd) cache directly. Materializing
+    the repeat would (a) read the cache at query-head width and (b) force
+    GSPMD to reshard/replicate the repeated tensor; grouping keeps the
+    cache bf16, read once, and sequence-sharded. The softmax over the
+    sharded S axis lowers to per-shard max/sum + tiny cross-shard
+    reductions — the flash-decoding LSE combine, emitted by GSPMD.
+    """
+    b, _, _ = x.shape
+    pos = cache.length  # scalar
+    positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    q, k, v = _project_qkv(params, cfg, x, positions)
+
+    # append to cache at position `length`
+    k_cache = jax.lax.dynamic_update_slice(
+        cache.k, k.astype(cache.k.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache.v, v.astype(cache.v.dtype), (0, pos, 0, 0))
+    k_cache = shard(k_cache, "batch", "seq_sp", None, None)
+    v_cache = shard(v_cache, "batch", "seq_sp", None, None)
+
+    rep = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, 1, cfg.n_kv_heads, rep, cfg.hd).astype(jnp.float32)
+
+    logits = jnp.einsum("bqkrd,bskd->bkrqs", qg, k_cache,
+                        preferred_element_type=jnp.float32) \
+        * (cfg.hd ** -0.5)
+    logits = softcap(logits, cfg.attn_softcap)
+    s_max = cache.k.shape[1]
+    idx = jnp.arange(s_max)
+    valid = idx <= pos
+    if window > 0:
+        valid &= idx > pos - window
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)          # LSE over sharded S
+    out = jnp.einsum("bkrqs,bskd->bqkrd", probs, v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out.astype(x.dtype).reshape(b, 1, cfg.n_heads * cfg.hd)
+    return out @ params["wo"], KVCache(k=k_cache, v=v_cache, length=pos + 1)

@@ -1,0 +1,99 @@
+"""Residual blocks: one per pattern kind ('a','l','A','m','M').
+
+Every block is pre-norm:  h += mixer(norm(h));  h += ffn(norm(h)).
+Mixer is attention (full 'a'/'A', sliding-window 'l') or mamba ('m','M');
+FFN is a dense MLP (lowercase + 'l') or the SpGEMM-framed MoE ('A','M').
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import (KVCache, attn_decode, attn_init, attn_prefill,
+                        attn_train, init_kv_cache)
+from .layers import mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+from .mamba2 import (SSMState, init_ssm_state, mamba_decode, mamba_init,
+                     mamba_train)
+from .moe import moe_apply, moe_init
+
+__all__ = ["block_init", "block_apply", "block_cache_init", "is_attn",
+           "is_moe", "is_mamba"]
+
+
+def is_attn(kind: str) -> bool:
+    return kind in "aAl"
+
+
+def is_mamba(kind: str) -> bool:
+    return kind in "mM"
+
+
+def is_moe(kind: str) -> bool:
+    return kind in "AM"
+
+
+def block_init(key, cfg: ModelConfig, kind: str, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"norm_mix": rmsnorm_init(cfg.d_model, dtype),
+         "norm_ffn": rmsnorm_init(cfg.d_model, dtype)}
+    if is_attn(kind):
+        p["attn"] = attn_init(k1, cfg, dtype)
+    else:
+        p["mamba"] = mamba_init(k1, cfg, dtype)
+    if is_moe(kind):
+        p["moe"] = moe_init(k2, cfg, dtype)
+    elif cfg.d_ff > 0:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    # d_ff == 0 (pure mamba2): no FFN sublayer
+    return p
+
+
+def block_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    if is_attn(kind):
+        return init_kv_cache(cfg, batch, max_len, dtype)
+    return init_ssm_state(cfg, batch, jnp.float32)
+
+
+def block_apply(params, cfg: ModelConfig, kind: str, h,
+                cache: Optional[Any] = None, mode: str = "train",
+                *, use_kernel: bool = True, interpret: bool = True):
+    """Returns (h, new_cache, aux_loss)."""
+    window = cfg.window if kind == "l" else 0
+    aux = jnp.zeros((), jnp.float32)
+
+    x = rmsnorm(params["norm_mix"], h, cfg.norm_eps)
+    if is_attn(kind):
+        if mode == "train":
+            mix, new_cache = attn_train(
+                params["attn"], cfg, x, window=window,
+                use_kernel=use_kernel, interpret=interpret), cache
+        elif mode == "prefill":
+            mix, new_cache = attn_prefill(
+                params["attn"], cfg, x, cache, window=window,
+                use_kernel=use_kernel, interpret=interpret)
+        else:  # decode
+            mix, new_cache = attn_decode(
+                params["attn"], cfg, x, cache, window=window)
+    else:
+        if mode == "decode":
+            mix, new_cache = mamba_decode(params["mamba"], cfg, x, cache)
+        else:
+            mix = mamba_train(params["mamba"], cfg, x)
+            new_cache = cache  # prefill state handled by caller if needed
+    h = h + mix
+
+    if is_moe(kind):
+        x = rmsnorm(params["norm_ffn"], h, cfg.norm_eps)
+        y, aux, _ = moe_apply(params["moe"], cfg, x,
+                              use_kernel=use_kernel, interpret=interpret)
+        h = h + y
+    elif "mlp" in params:
+        x = rmsnorm(params["norm_ffn"], h, cfg.norm_eps)
+        h = h + mlp_apply(params["mlp"], x, cfg.mlp)
+    # else: pure-mamba block (d_ff == 0), mixer only
+    return h, new_cache, aux

@@ -1,0 +1,88 @@
+"""Shared neural layers: norms, RoPE, MLP variants, init helpers.
+
+All modules are functional: ``*_init(key, ...) -> params`` (nested dicts of
+jnp arrays) and ``*_apply(params, x, ...) -> y``. Param names follow the
+conventions in ``sharding/rules.py`` so the name-based PartitionSpec rules
+resolve without per-model annotations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init", "rmsnorm_init", "rmsnorm", "rope", "mlp_init", "mlp_apply",
+    "softcap",
+]
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32):
+    scale = in_dim ** -0.5
+    return (jax.random.truncated_normal(
+        key, -2.0, 2.0, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """Rotary embedding. x: (..., S, H, D) — rotates last dim pairs.
+
+    positions: (..., S) int32 absolute positions.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]   # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants: swiglu (llama-family), geglu (gemma), relu2 (nemotron)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params, x, kind: str):
+    up = x @ params["w_up"]
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * up
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"], approximate=True) * up
+    elif kind == "relu2":
+        r = jax.nn.relu(up)
+        h = r * r                      # squared-ReLU (nemotron-4)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    return h @ params["w_down"]

@@ -1,0 +1,216 @@
+"""Mamba-2 (SSD — state-space duality) layer, chunked scan + decode step.
+
+Follows the minimal SSD formulation of Dao & Gu (arXiv:2405.21060): the
+sequence is cut into chunks; within a chunk the output is a masked
+(decay-weighted) attention-like quadratic form, across chunks a linear
+recurrence carries the (heads, head_dim, d_state) state. ``jax.lax.scan``
+runs the inter-chunk recurrence, so HLO size is O(1) in sequence length —
+this is what makes the 524k-token ``long_500k`` shape lowerable.
+
+Decode is the pure recurrence: constant work and state per new token
+(conv ring buffer + SSM state), no KV cache.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import dense_init, rmsnorm
+
+__all__ = ["mamba_init", "mamba_train", "mamba_decode", "SSMState",
+           "init_ssm_state"]
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array    # (B, d_conv-1, di + 2*ds) ring buffer
+    ssm: jax.Array     # (B, nh, hd, ds)
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    return s, d, di, nh, s.d_state, s.head_dim, s.d_conv
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    s, d, di, nh, ds, hd, dc = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    conv_dim = di + 2 * ds
+    return {
+        # projections: z (di), xBC (di + 2*ds), dt (nh)
+        "w_in": dense_init(ks[0], d, 2 * di + 2 * ds + nh, dtype),
+        "w_out": dense_init(ks[1], di, d, dtype),
+        "conv_w": (jax.random.normal(ks[2], (dc, conv_dim)) *
+                   (1.0 / dc)).astype(dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "d_skip": jnp.ones((nh,), dtype),
+        "norm": jnp.ones((di,), dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    s, d, di, nh, ds, hd, dc = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * ds]
+    dt = zxbcdt[..., di + di + 2 * ds:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w):
+    """Depthwise causal conv over seq. xbc: (B, S, C), conv_w: (K, C)."""
+    k = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        out = out + pad[:, i:i + xbc.shape[1]] * conv_w[i]
+    return jax.nn.silu(out)
+
+
+def _gated_norm(norm_scale, y, z, eps):
+    return rmsnorm({"scale": norm_scale}, y * jax.nn.silu(z), eps)
+
+
+def _segsum(x):
+    """(..., L) -> (..., L, L) lower-triangular pairwise cumulative sums:
+    out[i, j] = sum_{j < t <= i} x[t]  (−inf above the diagonal)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(L)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_chunked(x, da, b, c, chunk: int, unroll: bool = False):
+    """SSD core. x: (B,S,H,P); da: (B,S,H); b,c: (B,S,N). Returns (B,S,H,P)
+    plus the final inter-chunk state (B,H,P,N)."""
+    B, S, H, Pd = x.shape
+    N = b.shape[-1]
+    nchunk = S // chunk
+    xr = x.reshape(B, nchunk, chunk, H, Pd)
+    dar = da.reshape(B, nchunk, chunk, H)
+    br = b.reshape(B, nchunk, chunk, N)
+    cr = c.reshape(B, nchunk, chunk, N)
+
+    # intra-chunk (diagonal blocks): decay-masked quadratic attention
+    da_t = dar.transpose(0, 1, 3, 2)                 # (B,C,H,L)
+    Lmat = jnp.exp(_segsum(da_t))                    # (B,C,H,L,L)
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp",
+                        cr, br, Lmat, xr)
+
+    # chunk summary states: decayed outer products B ⊗ x
+    cum = jnp.cumsum(da_t, axis=-1)                  # (B,C,H,L)
+    decay_states = jnp.exp(cum[..., -1:] - cum)      # (B,C,H,L)
+    states = jnp.einsum("bcln,bchl,bclhp->bchpn",
+                        br, decay_states, xr)        # (B,C,H,P,N)
+
+    # inter-chunk recurrence: S_{c+1} = exp(sum dA_c) S_c + states_c
+    chunk_decay = jnp.exp(cum[..., -1])              # (B,C,H)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                            # emit *previous* state
+
+    init = jnp.zeros((B, H, Pd, N), x.dtype)
+    final, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=nchunk if unroll else 1)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,C,H,P,N)
+
+    # contribution of carried state to each position in the chunk
+    state_decay = jnp.exp(cum)                       # (B,C,H,L)
+    y_off = jnp.einsum("bcln,bchpn,bchl->bclhp",
+                       cr, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(B, S, H, Pd)
+    return y, final
+
+
+def mamba_train(params, cfg: ModelConfig, x):
+    """x: (B, S, d) -> (B, S, d). S must divide by cfg.ssm.chunk (padded
+    by the caller if not)."""
+    s, d, di, nh, ds, hd, dc = _dims(cfg)
+    B, S, _ = x.shape
+    chunk = min(s.chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+
+    zxbcdt = x @ params["w_in"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, params["conv_w"])
+    xs = xbc[..., :di].reshape(B, S, nh, hd)
+    b = xbc[..., di:di + ds]
+    c = xbc[..., di + ds:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    da = dt * a                                        # (B,S,nh)
+
+    y, _ = _ssd_chunked(
+        (xs * dt[..., None]).astype(jnp.float32),
+        da, b.astype(jnp.float32), c.astype(jnp.float32), chunk,
+        unroll=cfg.unroll_inner)
+    y = y + xs.astype(jnp.float32) * params["d_skip"].astype(
+        jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = _gated_norm(params["norm"], y, z, cfg.norm_eps)
+    out = y @ params["w_out"]
+    return out[:, :S - pad] if pad else out
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_ssm_state(cfg: ModelConfig, batch: int,
+                   dtype=jnp.float32) -> SSMState:
+    s, d, di, nh, ds, hd, dc = _dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, dc - 1, di + 2 * ds), dtype),
+        ssm=jnp.zeros((batch, nh, hd, ds), dtype))
+
+
+def mamba_decode(params, cfg: ModelConfig, x,
+                 state: SSMState) -> Tuple[jax.Array, SSMState]:
+    """x: (B, 1, d) -> (B, 1, d); O(1) state update."""
+    s, d, di, nh, ds, hd, dc = _dims(cfg)
+    B = x.shape[0]
+    zxbcdt = x[:, 0] @ params["w_in"]                  # (B, ...)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+
+    # conv ring buffer: window = [conv_state, xbc]
+    win = jnp.concatenate([state.conv, xbc[:, None]], axis=1)  # (B, dc, C)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", win.astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32)))
+    new_conv = win[:, 1:]
+
+    xs = conv_out[..., :di].reshape(B, nh, hd)
+    b = conv_out[..., di:di + ds]
+    c = conv_out[..., di + ds:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))  # (B,nh)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                            # (B,nh)
+
+    # h <- decay * h + dt * x ⊗ B ; y = h · C + D * x
+    upd = jnp.einsum("bhp,bn->bhpn", xs * dt[..., None], b)
+    h = state.ssm * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, c)
+    y = y + xs * params["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = _gated_norm(params["norm"], y, z[:, None], cfg.norm_eps)
+    return y @ params["w_out"], SSMState(conv=new_conv, ssm=h)

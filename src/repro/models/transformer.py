@@ -1,0 +1,250 @@
+"""The LM: embedding → scan-over-periods → final norm → (tied) logits.
+
+The layer stack is organized as ``n_periods`` repeats of the config's
+``pattern`` (e.g. gemma2: ('l','a') × 13; jamba: ('m','m','m','A','m','M',
+'m','M') × 4; dense archs: ('a',) × L). Parameters for each pattern
+position are stacked over periods and the periods run under one
+``jax.lax.scan`` — HLO size stays O(period), which keeps 512-device
+lowering of 88-layer models tractable, and the scan carry is where remat
+cuts.
+
+Three entry points mirror the shape families:
+  * :func:`loss_fn`      — train_4k (next-token CE + MoE aux)
+  * :func:`prefill_step` — prefill_32k (logits + populated caches)
+  * :func:`decode_step`  — decode_32k / long_500k (1 token vs caches)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import current_rules, param_pspecs, shard
+from .blocks import block_apply, block_cache_init, block_init, is_attn
+from .layers import rmsnorm, rmsnorm_init, softcap
+
+__all__ = ["init_params", "loss_fn", "train_logits", "prefill_step",
+           "decode_step", "init_caches"]
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    k_embed, k_blocks = jax.random.split(key)
+    embed = (jax.random.truncated_normal(
+        k_embed, -2, 2, (cfg.vocab, cfg.d_model)) *
+        cfg.d_model ** -0.5).astype(dtype)
+
+    period: Dict[str, Any] = {}
+    keys = jax.random.split(k_blocks, len(cfg.pattern))
+    for i, kind in enumerate(cfg.pattern):
+        pos_keys = jax.random.split(keys[i], cfg.n_periods)
+        period[f"pos{i}"] = jax.vmap(
+            lambda k: block_init(k, cfg, kind, dtype))(pos_keys)
+    return {
+        "embed": embed,
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "period": period,
+    }
+
+
+def _embed_input(params, cfg: ModelConfig, batch):
+    if cfg.input_kind == "embeds":
+        h = batch["embeds"]
+    else:
+        h = params["embed"][batch["tokens"]]
+    return h.astype(jnp.dtype(cfg.dtype))
+
+
+def _make_period_body(cfg: ModelConfig, mode: str, use_kernel: bool,
+                      interpret: bool, with_cache: bool):
+    compute_dtype = jnp.dtype(cfg.dtype)
+
+    def body(carry, xs):
+        h, aux = carry
+        if with_cache:
+            pparams, caches = xs
+        else:
+            pparams, caches = xs, None
+        # mixed precision: f32 master params, compute in cfg.dtype
+        pparams = jax.tree.map(
+            lambda w: w.astype(compute_dtype)
+            if w.dtype == jnp.float32 else w, pparams)
+        new_caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            cache_i = caches[f"pos{i}"] if with_cache else None
+            h, nc, a = block_apply(
+                pparams[f"pos{i}"], cfg, kind, h, cache_i, mode,
+                use_kernel=use_kernel, interpret=interpret)
+            new_caches[f"pos{i}"] = nc
+            aux = aux + a
+        h = shard(h, "batch", None, None)
+        return (h, aux), (new_caches if with_cache else None)
+
+    return body
+
+
+def _run_stack(params, cfg: ModelConfig, h, mode: str, caches=None,
+               use_kernel: bool = True, interpret: bool = True):
+    h = shard(h, "batch", None, None)
+    aux0 = jnp.zeros((), jnp.float32)
+    with_cache = caches is not None
+    body = _make_period_body(cfg, mode, use_kernel, interpret, with_cache)
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        # save matmul outputs + MoE a2a results, recompute elementwise —
+        # kills most recompute flops AND the backward re-dispatch a2a
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.save_from_both_policies(
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                jax.checkpoint_policies.save_only_these_names(
+                    "moe_a2a_fwd", "moe_a2a_ret")))
+    # cast the stacked layer params to compute dtype OUTSIDE the scan AND
+    # pin the cast output to the params' own (FSDP) sharding: without the
+    # pin, GSPMD propagates the matmuls' "replicated" requirement backward
+    # through the convert and all-gathers the f32 master instead — 2× the
+    # collective bytes (§Perf musicgen iterations 2-3: refuted without the
+    # pin, confirmed with it). Grad cotangents come back in bf16 for the
+    # same reason (reduce in bf16, accumulate f32 in AdamW).
+    compute_dtype = jnp.dtype(cfg.dtype)
+    period = jax.tree.map(
+        lambda w: w.astype(compute_dtype)
+        if w.dtype == jnp.float32 else w, params["period"])
+    rules = current_rules()
+    if rules is not None and rules.mesh is not None:
+        specs = param_pspecs(params["period"], rules)
+        period = jax.tree.map(
+            jax.lax.with_sharding_constraint, period, specs,
+            is_leaf=lambda z: isinstance(z, jax.Array))
+    xs = (period, caches) if with_cache else period
+    (h, aux), ys = jax.lax.scan(
+        body, (h, aux0), xs,
+        unroll=cfg.n_periods if cfg.unroll_layers else 1)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return h, aux, (ys if with_cache else None)
+
+
+def train_logits(params, cfg: ModelConfig, batch, *,
+                 use_kernel: bool = True, interpret: bool = True):
+    h = _embed_input(params, cfg, batch)
+    h, aux, _ = _run_stack(params, cfg, h, "train",
+                           use_kernel=use_kernel, interpret=interpret)
+    logits = h.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    logits = softcap(logits, cfg.logit_softcap)
+    return logits, aux
+
+
+def _chunked_ce(params, cfg: ModelConfig, h, labels, n_chunks: int):
+    """Cross entropy without materializing (B, S, vocab) logits.
+
+    The full logit tensor for a 256k-vocab arch at train_4k is
+    256·4096·256000·4B ≈ 1 TB — the classic memory bomb. We scan over
+    sequence chunks (batch sharding stays intact on every chunk) and
+    ``jax.checkpoint`` the chunk body so the backward pass recomputes each
+    chunk's logits instead of saving them: peak extra memory is one chunk.
+
+    The CE itself is computed *vocab-sharded*: ``take_along_axis`` across
+    a model-sharded vocab dim makes GSPMD all-gather the embedding every
+    chunk (1.2–2.4 GB × 2×chunks for the big-vocab archs — measured as
+    the single largest collective in the MoE train cells, §Perf). The
+    where/iota formulation keeps every reduction shard-local + one tiny
+    cross-shard sum.
+    """
+    b, s, d = h.shape
+    embed_t = params["embed"].T
+    sc = s // n_chunks
+    vocab = cfg.vocab
+
+    def body(carry, xs):
+        hc, lc = xs                                   # (B, sc, d), (B, sc)
+        # shed 'model' from the chunk's batch sharding so the logits can
+        # shard over vocab on 'model' instead — regathering the small hc
+        # chunk beats all-gathering the (GB-scale) embedding every chunk
+        hc = shard(hc, "batch_nm", None, None)
+        logits = hc.astype(jnp.float32) @ embed_t.astype(jnp.float32)
+        logits = softcap(logits, cfg.logit_softcap)
+        logits = shard(logits, "batch_nm", None, "vocab")
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        label_logit = jnp.sum(
+            jnp.where(cols == jnp.clip(lc, 0)[..., None], logits, 0.0),
+            axis=-1)
+        ll = label_logit - lse
+        mask = (lc >= 0).astype(jnp.float32)
+        ce_sum, cnt = carry
+        return (ce_sum - (ll * mask).sum(), cnt + mask.sum()), None
+
+    hs = h.reshape(b, n_chunks, sc, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n_chunks, sc).transpose(1, 0, 2)
+    (ce_sum, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body), (jnp.zeros((), jnp.float32),
+                               jnp.zeros((), jnp.float32)), (hs, ls),
+        unroll=n_chunks if cfg.unroll_inner else 1)
+    return ce_sum / jnp.clip(cnt, 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *,
+            use_kernel: bool = True, interpret: bool = True,
+            loss_chunks: Optional[int] = None):
+    """Next-token cross entropy. batch: tokens/embeds + 'labels' (B, S)."""
+    h = _embed_input(params, cfg, batch)
+    h, aux, _ = _run_stack(params, cfg, h, "train",
+                           use_kernel=use_kernel, interpret=interpret)
+    labels = batch["labels"]
+    s = labels.shape[1]
+    if loss_chunks is None:
+        # target ≤ ~8M logit rows per chunk; always ≥1, divides S
+        loss_chunks = 1
+        for c in (16, 8, 4, 2):
+            if s % c == 0 and s // c >= 256:
+                loss_chunks = c
+                break
+    ce = _chunked_ce(params, cfg, h, labels, loss_chunks)
+    metrics = {"loss/ce": ce, "loss/aux": aux,
+               "loss/total": ce + aux}
+    return ce + aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    """Stacked (n_periods leading dim) caches per pattern position."""
+    caches = {}
+    for i, kind in enumerate(cfg.pattern):
+        one = block_cache_init(cfg, kind, batch, max_len, dtype)
+        caches[f"pos{i}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x[None], (cfg.n_periods,) + x.shape), one)
+    return caches
+
+
+def prefill_step(params, cfg: ModelConfig, batch, caches, *,
+                 use_kernel: bool = True, interpret: bool = True):
+    h = _embed_input(params, cfg, batch)
+    h, _, new_caches = _run_stack(params, cfg, h, "prefill", caches,
+                                  use_kernel=use_kernel,
+                                  interpret=interpret)
+    # last-position logits only (the serving output)
+    logits = h[:, -1].astype(jnp.float32) @ \
+        params["embed"].T.astype(jnp.float32)
+    return softcap(logits, cfg.logit_softcap), new_caches
+
+
+def decode_step(params, cfg: ModelConfig, batch, caches, *,
+                use_kernel: bool = True, interpret: bool = True):
+    """batch: one token per sequence; caches from prefill/init."""
+    h = _embed_input(params, cfg, batch)
+    h, _, new_caches = _run_stack(params, cfg, h, "decode", caches,
+                                  use_kernel=use_kernel,
+                                  interpret=interpret)
+    logits = h[:, -1].astype(jnp.float32) @ \
+        params["embed"].T.astype(jnp.float32)
+    return softcap(logits, cfg.logit_softcap), new_caches

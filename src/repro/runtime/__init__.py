@@ -1,0 +1,2 @@
+from .fault_tolerance import (RetryPolicy, StepTimer, StragglerStats,
+                              TrainLoopRunner, with_retries)

@@ -1,0 +1,144 @@
+"""Fault tolerance & straggler mitigation for the training loop.
+
+A 512-chip job fails somewhere every few hours; a 10k-chip job every few
+minutes. The contract here:
+
+  * **Checkpoint/restart** — `TrainLoopRunner` snapshots (params, opt,
+    data step) every `ckpt_every` steps through the async
+    `CheckpointManager`; on construction it auto-resumes from the latest
+    checkpoint, and the deterministic data pipeline skip-ahead (data/
+    pipeline.py) puts the restarted job on exactly the batch it would have
+    seen — no replay, no skip.
+  * **Transient-failure retries** — `with_retries` wraps the device step;
+    XlaRuntimeError / RuntimeError (preempted link, DMA timeout) triggers
+    exponential backoff and, past a threshold, re-raises for the scheduler
+    to replace the node and restart from checkpoint.
+  * **Straggler detection** — `StragglerStats` keeps a rolling window of
+    per-step wall times; a step slower than `z_thresh` standard deviations
+    flags the host (on a real cluster this feeds the controller's
+    hot-spare swap; here it is surfaced in metrics and tested against
+    synthetic delays).
+  * **Elastic scaling** — restore goes through `restore_checkpoint`'s
+    resharding path, so the runner can come back on a different mesh; the
+    data pipeline reshards by (shard, nshards) arguments alone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+
+__all__ = ["RetryPolicy", "with_retries", "StragglerStats", "StepTimer",
+           "TrainLoopRunner"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    max_retries: int = 3
+    backoff_s: float = 0.5
+    backoff_mult: float = 2.0
+    retryable: tuple = (RuntimeError,)
+
+
+def with_retries(fn: Callable, policy: RetryPolicy = RetryPolicy(),
+                 on_retry: Optional[Callable[[int, Exception], None]] = None):
+    """Wrap ``fn``; transient failures back off and retry."""
+
+    def wrapped(*args, **kwargs):
+        delay = policy.backoff_s
+        for attempt in range(policy.max_retries + 1):
+            try:
+                return fn(*args, **kwargs)
+            except policy.retryable as e:  # pragma: no cover - timing
+                if attempt == policy.max_retries:
+                    raise
+                if on_retry is not None:
+                    on_retry(attempt, e)
+                time.sleep(delay)
+                delay *= policy.backoff_mult
+        raise AssertionError("unreachable")
+
+    return wrapped
+
+
+class StragglerStats:
+    """Rolling per-step timing; z-score flagging of slow steps."""
+
+    def __init__(self, window: int = 50, z_thresh: float = 3.0):
+        self.window = window
+        self.z_thresh = z_thresh
+        self.times: deque = deque(maxlen=window)
+        self.flagged = 0
+
+    def record(self, dt: float) -> bool:
+        """Returns True if this step is a straggler."""
+        is_straggler = False
+        if len(self.times) >= 10:
+            mu = float(np.mean(self.times))
+            sd = float(np.std(self.times)) + 1e-9
+            if (dt - mu) / sd > self.z_thresh:
+                is_straggler = True
+                self.flagged += 1
+        self.times.append(dt)
+        return is_straggler
+
+    def summary(self) -> Dict[str, float]:
+        if not self.times:
+            return {"step_time_mean": 0.0, "stragglers": 0}
+        return {"step_time_mean": float(np.mean(self.times)),
+                "step_time_p50": float(np.median(self.times)),
+                "step_time_max": float(np.max(self.times)),
+                "stragglers": float(self.flagged)}
+
+
+class StepTimer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.dt = time.perf_counter() - self.t0
+        return False
+
+
+class TrainLoopRunner:
+    """Orchestrates step → time → checkpoint → (maybe) restart-resume."""
+
+    def __init__(self, step_fn: Callable, state: Any, ckpt_dir: str,
+                 *, ckpt_every: int = 100, keep: int = 3,
+                 retry: RetryPolicy = RetryPolicy(),
+                 straggler_window: int = 50):
+        self.manager = CheckpointManager(ckpt_dir, keep=keep)
+        self.stats = StragglerStats(window=straggler_window)
+        self.ckpt_every = ckpt_every
+        self.state = state
+        self.start_step = 0
+        self._step_fn = with_retries(step_fn, retry)
+        # auto-resume
+        from ..checkpoint import latest_step
+        last = latest_step(ckpt_dir)
+        if last is not None:
+            self.state = self.manager.restore(self.state, step=last)
+            self.start_step = last
+
+    def run(self, batches: Callable[[int], Any], num_steps: int,
+            log_every: int = 10,
+            log_fn: Callable[[int, Dict], None] = None) -> Any:
+        for step in range(self.start_step, self.start_step + num_steps):
+            batch = batches(step)
+            with StepTimer() as t:
+                self.state, metrics = self._step_fn(self.state, batch)
+            self.stats.record(t.dt)
+            if log_fn is not None and step % log_every == 0:
+                log_fn(step, {**{k: float(v) for k, v in metrics.items()},
+                              **self.stats.summary()})
+            if (step + 1) % self.ckpt_every == 0:
+                self.manager.save(step + 1, self.state)
+        self.manager.wait()
+        return self.state

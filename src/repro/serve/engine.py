@@ -1,0 +1,95 @@
+"""Batched serving engine: request queue → padded prefill → decode loop.
+
+A deliberately small but complete serving layer: requests accumulate into
+fixed-size batches (static shapes keep one compiled executable), prefill
+populates the caches, and a greedy/temperature decode loop streams tokens
+until EOS or max_new_tokens. Per-slot completion masks let short sequences
+finish early without recompiling.
+
+The decode step is the same ``decode_step`` the dry-run lowers for
+``decode_32k``/``long_500k`` — serving and the roofline analysis exercise
+one code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import decode_step, init_caches, prefill_step
+
+__all__ = ["ServeEngine", "GenerationResult"]
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray            # (B, <=max_new) generated ids
+    lengths: np.ndarray           # (B,) tokens generated per request
+    prefill_len: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
+                 batch_slots: int = 4, eos_id: int = -1,
+                 use_kernel: bool = False, interpret: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.batch_slots = batch_slots
+        self.eos_id = eos_id
+
+        def _prefill(params, batch, caches):
+            return prefill_step(params, cfg, batch, caches,
+                                use_kernel=use_kernel, interpret=interpret)
+
+        def _decode(params, batch, caches):
+            return decode_step(params, cfg, batch, caches,
+                               use_kernel=use_kernel, interpret=interpret)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+
+    def generate(self, prompts: List[np.ndarray], *, max_new_tokens: int = 16,
+                 greedy: bool = True, seed: int = 0) -> GenerationResult:
+        """prompts: list of 1-D int arrays (ragged). Pads to one batch."""
+        assert len(prompts) <= self.batch_slots
+        b = self.batch_slots
+        plen = max(len(p) for p in prompts)
+        toks = np.zeros((b, plen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, plen - len(p):] = p          # left-pad (causal-safe)
+
+        caches = init_caches(self.cfg, b, self.max_len)
+        logits, caches = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, caches)
+
+        key = jax.random.PRNGKey(seed)
+        out = np.zeros((b, max_new_tokens), np.int32)
+        done = np.zeros(b, bool)
+        lengths = np.zeros(b, np.int64)
+        cur = None
+        for t in range(max_new_tokens):
+            if greedy:
+                nxt = jnp.argmax(logits, axis=-1)
+            else:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits)
+            nxt_np = np.asarray(nxt, np.int32)
+            out[:, t] = nxt_np
+            newly = (nxt_np == self.eos_id) & ~done
+            lengths[~done] += 1
+            done |= newly
+            if done.all():
+                out = out[:, :t + 1]
+                break
+            logits, caches = self._decode(
+                self.params, {"tokens": jnp.asarray(nxt_np)[:, None]},
+                caches)
+        return GenerationResult(tokens=out[:len(prompts)],
+                                lengths=lengths[:len(prompts)],
+                                prefill_len=plen)

@@ -1,0 +1,2 @@
+from .rules import (AXIS_DATA, AXIS_MODEL, AXIS_POD, ShardingRules,
+                    current_rules, param_pspecs, shard, use_rules)

@@ -1,0 +1,111 @@
+"""Hand-rolled AdamW + schedules + gradient clipping + compression.
+
+No optax offline — the optimizer is ~80 lines and owning it lets the
+dry-run shard optimizer state with the same name-based rules as params
+(moments inherit the param PartitionSpecs, i.e. ZeRO-sharded).
+
+Gradient compression (int8 with error feedback) is the distributed-
+optimization trick for cross-pod traffic: the pod axis all-reduce moves
+1/4 the bytes; the residual buffer carries quantization error to the next
+step (proven-convergent EF-SGD family).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "cosine_schedule", "clip_by_global_norm",
+           "compress_int8", "decompress_int8"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+class OptState(NamedTuple):
+    mu: Any       # first moment (params-shaped)
+    nu: Any       # second moment
+    step: jax.Array
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p)
+    return OptState(mu=jax.tree.map(zeros, params),
+                    nu=jax.tree.map(zeros, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw_update(cfg: AdamWConfig, params, grads,
+                 state: OptState) -> Tuple[Any, OptState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = cosine_schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * gf
+        v = cfg.b2 * v + (1 - cfg.b2) * gf * gf
+        mhat = m / b1c
+        vhat = v / b2c
+        step_ = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(new_m, new_v, step), \
+        {"opt/grad_norm": gnorm, "opt/lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression with error feedback
+# ---------------------------------------------------------------------------
+
+def compress_int8(g, residual):
+    """Per-tensor symmetric int8 quantization; returns (q, scale, new_res)."""
+    gf = g.astype(jnp.float32) + residual
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_res = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_res
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale

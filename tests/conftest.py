@@ -1,0 +1,21 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here on purpose — smoke tests
+must see the real (single) device; multi-device tests spawn subprocesses
+with their own flags (see test_device_ring.py / test_dryrun_cell.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (banded_clustered, block_diagonal_noise, erdos_renyi,
+                        laplacian_2d, rmat)
+
+
+@pytest.fixture(scope="session")
+def gen_matrices():
+    """Small structure-matched analogues of the paper's input families."""
+    return {
+        "banded": banded_clustered(320, 24, 6.0, seed=1),     # hv15r-like
+        "er": erdos_renyi(256, 256, 5.0, seed=2),             # eukarya-like
+        "mesh": laplacian_2d(18),                             # nlpkkt-like
+        "community": block_diagonal_noise(256, 8, 6.0, 0.5, seed=3),
+        "rmat": rmat(8, 8, seed=4),
+    }

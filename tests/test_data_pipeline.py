@@ -1,0 +1,47 @@
+"""Data pipeline: determinism, skip-ahead, sharding, prefetch."""
+
+import numpy as np
+
+from repro.data import SyntheticLMDataset, make_batch_iterator
+
+
+def test_determinism():
+    ds = SyntheticLMDataset(vocab=100, seq_len=16, global_batch=8, seed=3)
+    b1 = ds.batch(5)
+    b2 = ds.batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_steps_differ():
+    ds = SyntheticLMDataset(vocab=100, seq_len=16, global_batch=8, seed=3)
+    assert not np.array_equal(ds.batch(0)["tokens"], ds.batch(1)["tokens"])
+
+
+def test_shards_partition_batch():
+    ds = SyntheticLMDataset(vocab=100, seq_len=16, global_batch=8, seed=3)
+    sh0 = ds.batch(2, shard=0, nshards=4)
+    sh1 = ds.batch(2, shard=1, nshards=4)
+    assert sh0["tokens"].shape == (2, 16)
+    assert not np.array_equal(sh0["tokens"], sh1["tokens"])
+
+
+def test_labels_shifted():
+    ds = SyntheticLMDataset(vocab=100, seq_len=16, global_batch=2, seed=0)
+    b = ds.batch(0)
+    # labels are the next token of the same underlying stream
+    assert b["tokens"].shape == b["labels"].shape
+
+
+def test_embeds_stub():
+    ds = SyntheticLMDataset(vocab=100, seq_len=8, global_batch=2, seed=0,
+                            input_kind="embeds", d_model=32)
+    b = ds.batch(0)
+    assert b["embeds"].shape == (2, 8, 32)
+
+
+def test_prefetch_iterator_skip_ahead():
+    ds = SyntheticLMDataset(vocab=50, seq_len=8, global_batch=4, seed=1)
+    it = make_batch_iterator(ds, start_step=10)
+    first = next(it)
+    it.close()
+    np.testing.assert_array_equal(first["tokens"], ds.batch(10)["tokens"])

@@ -1,0 +1,45 @@
+"""Integration: one real dry-run cell in a 512-fake-device subprocess.
+
+Picks the cheapest cells (decode steps of the two smallest archs, one per
+mesh) so CI stays fast; the full 40-cell matrix is produced by
+``python -m repro.launch.dryrun --all`` (see EXPERIMENTS.md).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import json
+    from repro.launch.dryrun import lower_cell
+    rec, _ = lower_cell("musicgen-large", "decode_32k",
+                        multi_pod={MULTI}, verbose=False)
+    assert rec["status"] == "ok", rec
+    assert rec["chips"] == {CHIPS}
+    assert rec["flops_dev"] > 0 and rec["coll_dev"] >= 0
+    print("RECORD", json.dumps(rec, default=float))
+""")
+
+
+@pytest.mark.parametrize("multi,chips", [(False, 256), (True, 512)])
+def test_dryrun_decode_cell(multi, chips):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = SCRIPT.replace("{MULTI}", str(multi)).replace(
+        "{CHIPS}", str(chips))
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = json.loads(out.stdout.split("RECORD ", 1)[1])
+    assert rec["dominant"] in ("compute", "memory", "collective")
+
+
+def test_long500k_skip_for_full_attention():
+    from repro.configs import get_config
+    assert not get_config("qwen3-8b").supports_long_context
+    assert get_config("jamba-v0.1-52b").supports_long_context

@@ -1,0 +1,70 @@
+"""Local SpGEMM oracle vs dense, over all semirings + flop count property."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BOOL_OR_AND, MIN_PLUS, PLUS_TIMES, from_dense,
+                        spadd, spgemm, spgemm_flops, spgemm_structure)
+
+
+def _rand(m, k, density, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.random((m, k)) < density) * rng.standard_normal((m, k))
+
+
+@given(st.integers(1, 20), st.integers(1, 20), st.integers(1, 20),
+       st.integers(0, 2**31))
+@settings(max_examples=40, deadline=None)
+def test_plus_times_matches_dense(m, k, n, seed):
+    da = _rand(m, k, 0.3, seed)
+    db = _rand(k, n, 0.3, seed + 1)
+    c = spgemm(from_dense(da), from_dense(db))
+    np.testing.assert_allclose(c.to_dense(), da @ db, atol=1e-10)
+
+
+@given(st.integers(2, 16), st.integers(0, 2**31))
+@settings(max_examples=25, deadline=None)
+def test_flops_property(n, seed):
+    """flops = <colnnz(A), rownnz(B)> — the paper's sparse-flops count."""
+    da = _rand(n, n, 0.4, seed)
+    db = _rand(n, n, 0.4, seed + 7)
+    a, b = from_dense(da), from_dense(db)
+    expected = sum(int((da[:, j] != 0).sum()) * int((db[j, :] != 0).sum())
+                   for j in range(n))
+    assert spgemm_flops(a, b) == expected
+
+
+def test_bool_semiring(gen_matrices):
+    a = gen_matrices["er"]
+    c = spgemm(a, a, BOOL_OR_AND)
+    dense = ((np.abs(a.to_dense()) > 0).astype(float) @
+             (np.abs(a.to_dense()) > 0).astype(float)) > 0
+    np.testing.assert_array_equal(c.to_dense() > 0, dense)
+
+
+def test_min_plus_semiring():
+    da = np.array([[0.0, 3.0], [2.0, 0.0]])
+    a = from_dense(da)   # zeros are "no edge" (inf)
+    c = spgemm(a, a, MIN_PLUS)
+    # path 0->1->0 has weight 3+2=5; min-plus square gives shortest 2-paths
+    assert c.to_dense()[0, 0] == 5.0
+
+
+def test_spadd(gen_matrices):
+    a = gen_matrices["banded"]
+    b = gen_matrices["er"]
+    if a.shape != b.shape:
+        pytest.skip("shape mismatch in fixtures")
+    np.testing.assert_allclose(spadd(a, b).to_dense(),
+                               a.to_dense() + b.to_dense(), atol=1e-12)
+
+
+def test_structure_matches_numeric(gen_matrices):
+    a = gen_matrices["mesh"]
+    s = spgemm_structure(a, a)
+    c = spgemm(a, a)
+    got = set(zip(*np.nonzero(s.to_dense())))
+    want = set(zip(*np.nonzero(c.to_dense())))
+    # numeric cancellation can only shrink the numeric pattern
+    assert want <= got

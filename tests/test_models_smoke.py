@@ -1,0 +1,113 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+output shapes + no NaNs; decode step for every arch (all are decoders)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, smoke_config
+from repro.models import (decode_step, init_caches, init_params, loss_fn,
+                          prefill_step, train_logits)
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, b=2, s=16, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, size=(b, s)).astype(np.int32)
+    batch = {"labels": jnp.asarray(toks)}
+    if cfg.input_kind == "embeds":
+        batch["embeds"] = jnp.asarray(
+            rng.standard_normal((b, s, cfg.d_model)).astype(np.float32))
+    else:
+        batch["tokens"] = jnp.asarray(toks)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_is_exact(arch):
+    """Full configs match the assignment sheet (never instantiated)."""
+    cfg = get_config(arch)
+    spec = {
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        "mamba2-1.3b": (48, 2048, None, None, 0, 50280),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32768),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    }[arch]
+    L, d, h, kv, ff, v = spec
+    assert cfg.n_layers == L and cfg.d_model == d and cfg.vocab == v
+    if h is not None:
+        assert cfg.n_heads == h and cfg.n_kv_heads == kv
+    if arch == "phi3.5-moe-42b-a6.6b":
+        assert cfg.moe.n_experts == 16 and cfg.moe.top_k == 2
+    if arch == "qwen2-moe-a2.7b":
+        assert cfg.moe.n_experts == 60 and cfg.moe.top_k == 4
+        assert cfg.moe.n_shared == 4
+    if arch == "jamba-v0.1-52b":
+        assert cfg.moe.n_experts == 16 and cfg.ssm is not None
+        # 1:7 attention:mamba ratio
+        n_attn = sum(1 for k in cfg.pattern if k in "aA")
+        n_mamba = sum(1 for k in cfg.pattern if k in "mM")
+        assert (n_attn, n_mamba) == (1, 7)
+    if arch == "mamba2-1.3b":
+        assert cfg.ssm.d_state == 128
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits, aux = train_logits(params, cfg, batch, use_kernel=False)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), arch
+    loss, metrics = loss_fn(params, cfg, batch, use_kernel=False)
+    assert bool(jnp.isfinite(loss))
+    g = jax.grad(lambda p: loss_fn(p, cfg, batch, use_kernel=False)[0])(
+        params)
+    finite = jax.tree.reduce(
+        lambda a, b: a and b,
+        jax.tree.map(lambda x: bool(jnp.isfinite(x).all()), g))
+    assert finite, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serve_steps_smoke(arch):
+    cfg = smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, b=2, s=8)
+    batch.pop("labels")
+    caches = init_caches(cfg, 2, 32)
+    logits, caches = prefill_step(params, cfg, batch, caches,
+                                  use_kernel=False)
+    assert logits.shape == (2, cfg.vocab)
+    nxt = jnp.argmax(logits, -1)[:, None]
+    dec_batch = ({"tokens": nxt} if cfg.input_kind != "embeds" else
+                 {"embeds": jnp.zeros((2, 1, cfg.d_model))})
+    logits2, caches = decode_step(params, cfg, dec_batch, caches,
+                                  use_kernel=False)
+    assert logits2.shape == (2, cfg.vocab)
+    assert bool(jnp.isfinite(logits2).all()), arch
+
+
+def test_long_context_eligibility():
+    eligible = {a for a in ARCHS if get_config(a).supports_long_context}
+    assert eligible == {"mamba2-1.3b", "jamba-v0.1-52b"}
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "qwen3-8b"])
+def test_feature_flags_respected(arch):
+    cfg = get_config(arch)
+    if arch == "gemma2-2b":
+        assert cfg.attn_softcap == 50.0 and cfg.logit_softcap == 30.0
+        assert cfg.pattern == ("l", "a") and cfg.window == 4096
+        assert cfg.mlp == "geglu" and cfg.hd == 256
+    else:
+        assert cfg.qk_norm and cfg.mlp == "swiglu"

@@ -1,0 +1,48 @@
+"""Multilevel partitioner: balance, cut quality, permutation plumbing."""
+
+import numpy as np
+
+from repro.core import (block_diagonal_noise, edge_cut, multilevel_partition,
+                        partition_to_permutation, permute_symmetric,
+                        random_permutation, spgemm_1d)
+from repro.core.plan import Partition1D
+
+
+def test_partitioner_recovers_planted_communities():
+    a = block_diagonal_noise(240, 8, d_in=8.0, d_out=0.3, seed=5)
+    rep = multilevel_partition(a, 8, seed=0)
+    rand = np.random.default_rng(0).integers(0, 8, size=a.ncols)
+    assert rep.cut < 0.5 * edge_cut(a, rand)
+    assert rep.weight_imbalance < 1.8
+
+
+def test_partition_to_permutation_roundtrip():
+    parts = np.array([2, 0, 1, 0, 2, 1])
+    perm, splits = partition_to_permutation(parts)
+    assert sorted(perm.tolist()) == list(range(6))
+    # vertices of part p land contiguously in [splits[p], splits[p+1])
+    for v, p in enumerate(parts):
+        assert splits[p] <= perm[v] < splits[p + 1]
+
+
+def test_partitioned_spgemm_cuts_communication():
+    """Paper §III.B: on unstructured-but-partitionable inputs, METIS-style
+    partitioning slashes the 1D algorithm's comm volume vs random perm."""
+    a = block_diagonal_noise(256, 8, d_in=8.0, d_out=0.2, seed=7)
+    # destroy the ordering first (worst case), then re-partition
+    rp = random_permutation(a.ncols, seed=1)
+    a_rand = permute_symmetric(a, rp)
+
+    rep = multilevel_partition(a_rand, 8, seed=0)
+    perm, splits = partition_to_permutation(rep.parts, 8)
+    a_part = permute_symmetric(a_rand, perm)
+    part = Partition1D(splits.astype(np.int64))
+
+    bytes_rand = spgemm_1d(a_rand, a_rand, 8).plan.total_fetched_bytes
+    bytes_part = spgemm_1d(a_part, a_part, 8, part_k=part,
+                           part_n=part).plan.total_fetched_bytes
+    assert bytes_part < 0.7 * bytes_rand
+    # correctness under the permutation
+    c_part = spgemm_1d(a_part, a_part, 8, part_k=part, part_n=part).concat()
+    d = a_part.to_dense()
+    np.testing.assert_allclose(c_part.to_dense(), d @ d, atol=1e-8)

@@ -1,0 +1,77 @@
+"""Algorithm 1-2 symbolic phase: block fetch + plan invariants (property)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Partition1D, build_fetch_plan, block_fetch_groups,
+                        cv_over_mema, erdos_renyi, banded_clustered,
+                        summa2d_comm_volume, summa3d_comm_volume)
+
+
+@given(st.integers(1, 200), st.integers(1, 64), st.integers(0, 2**31))
+@settings(max_examples=50, deadline=None)
+def test_block_fetch_invariants(nzc, k, seed):
+    """Messages ≤ K; fetched ⊇ hit; empty-hit groups not fetched."""
+    rng = np.random.default_rng(seed)
+    nz_cols = np.sort(rng.choice(10 * nzc, size=nzc, replace=False))
+    hit = rng.random(nzc) < 0.3
+    fetched, n_msg = block_fetch_groups(nz_cols, hit, k)
+    assert n_msg <= min(k, nzc)
+    assert (fetched | ~hit).all(), "every hit column must be fetched"
+    if not hit.any():
+        assert n_msg == 0 and not fetched.any()
+    if hit.all():
+        assert fetched.all()
+
+
+@given(st.integers(1, 64), st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_block_fetch_k1_fetches_everything_hit(nzc, seed):
+    rng = np.random.default_rng(seed)
+    nz_cols = np.arange(nzc)
+    hit = rng.random(nzc) < 0.5
+    fetched, n_msg = block_fetch_groups(nz_cols, hit, 1)
+    if hit.any():
+        assert fetched.all() and n_msg == 1
+
+
+@pytest.mark.parametrize("nblocks", [1, 8, 2048])
+def test_plan_monotonicity_in_k(gen_matrices, nblocks):
+    """More blocks => finer fetches => never more bytes than K=1."""
+    a = gen_matrices["banded"]
+    pk = Partition1D.balanced(a.ncols, 4)
+    pn = Partition1D.balanced(a.ncols, 4)
+    plan = build_fetch_plan(a, a, pk, pn, nblocks)
+    plan1 = build_fetch_plan(a, a, pk, pn, 1)
+    assert plan.total_fetched_bytes <= plan1.total_fetched_bytes
+    assert plan.total_required_bytes <= plan.total_fetched_bytes
+    for p in plan.pairs:
+        assert set(p.required_cols) <= set(p.fetched_cols)
+
+
+def test_structured_vs_random_cv(gen_matrices):
+    """Paper's core claim at plan level: clustered inputs need far less
+    communication than unstructured ones."""
+    banded = gen_matrices["banded"]
+    er = gen_matrices["er"]
+    cv_banded = cv_over_mema(banded, banded, 8)
+    cv_er = cv_over_mema(er, er, 8)
+    assert cv_banded < 0.5 * cv_er
+
+
+def test_2d_3d_volumes_positive(gen_matrices):
+    a = gen_matrices["er"]
+    v2 = summa2d_comm_volume(a, a, 4)
+    v3 = summa3d_comm_volume(a, a, 2, 4)
+    assert v2["total_bytes"] > 0
+    assert v3["total_bytes"] > 0
+    assert v2["per_process_bytes"].sum() == v2["total_bytes"]
+
+
+def test_partition_by_weight_balance():
+    w = np.ones(100)
+    w[:10] = 100.0
+    part = Partition1D.by_weight(w, 4)
+    sums = [w[part.splits[i]:part.splits[i + 1]].sum() for i in range(4)]
+    assert max(sums) <= 2.0 * (w.sum() / 4)

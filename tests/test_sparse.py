@@ -1,0 +1,103 @@
+"""CSC substrate: constructors, slicing, permutation — incl. property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CSC, from_coo, from_dense, identity, permute_cols,
+                        permute_rows, permute_symmetric, spadd, spgemm,
+                        symmetrize)
+from repro.core.sparse import hstack_partitions
+
+
+def rand_csc(draw, m, n, density=0.2, seed=0):
+    rng = np.random.default_rng(seed)
+    dense = (rng.random((m, n)) < density) * rng.standard_normal((m, n))
+    return from_dense(dense), dense
+
+
+@st.composite
+def csc_and_dense(draw):
+    m = draw(st.integers(1, 24))
+    n = draw(st.integers(1, 24))
+    seed = draw(st.integers(0, 2**31))
+    return rand_csc(draw, m, n, density=0.25, seed=seed)
+
+
+@given(csc_and_dense())
+@settings(max_examples=40, deadline=None)
+def test_roundtrip_dense(pair):
+    mat, dense = pair
+    np.testing.assert_allclose(mat.to_dense(), dense)
+
+
+@given(csc_and_dense())
+@settings(max_examples=40, deadline=None)
+def test_transpose_involution(pair):
+    mat, dense = pair
+    np.testing.assert_allclose(mat.transpose().to_dense(), dense.T)
+    np.testing.assert_allclose(
+        mat.transpose().transpose().to_dense(), dense)
+
+
+@given(csc_and_dense(), st.integers(0, 2**31))
+@settings(max_examples=30, deadline=None)
+def test_symmetric_permutation_conjugation(pair, seed):
+    mat, dense = pair
+    m, n = mat.shape
+    if m != n:
+        mat = from_dense(dense[:min(m, n), :min(m, n)])
+        dense = dense[:min(m, n), :min(m, n)]
+    perm = np.random.default_rng(seed).permutation(mat.nrows)
+    p = np.zeros((mat.nrows, mat.nrows))
+    p[perm, np.arange(mat.nrows)] = 1.0
+    np.testing.assert_allclose(
+        permute_symmetric(mat, perm).to_dense(), p @ dense @ p.T,
+        atol=1e-12)
+
+
+def test_from_coo_dedupe_sum():
+    c = from_coo([0, 0, 1], [0, 0, 1], [1.0, 2.0, 5.0], (2, 2))
+    assert c.nnz == 2
+    assert c.to_dense()[0, 0] == 3.0
+
+
+def test_col_slice_and_select(gen_matrices):
+    a = gen_matrices["er"]
+    sub = a.col_slice(10, 50)
+    np.testing.assert_allclose(sub.to_dense(), a.to_dense()[:, 10:50])
+    cols = np.array([3, 7, 100, 200])
+    sel = a.select_cols(cols)
+    np.testing.assert_allclose(sel.to_dense(), a.to_dense()[:, cols])
+    scat = sel.scatter_cols_into(cols, a.ncols)
+    dense = np.zeros(a.shape)
+    dense[:, cols] = a.to_dense()[:, cols]
+    np.testing.assert_allclose(scat.to_dense(), dense)
+
+
+def test_hstack_partitions(gen_matrices):
+    a = gen_matrices["banded"]
+    parts = [a.col_slice(0, 100), a.col_slice(100, 200),
+             a.col_slice(200, a.ncols)]
+    np.testing.assert_allclose(hstack_partitions(parts).to_dense(),
+                               a.to_dense())
+
+
+def test_nzc_dcsc_view(gen_matrices):
+    a = gen_matrices["er"]
+    dense = a.to_dense()
+    np.testing.assert_array_equal(a.nzc_ids,
+                                  np.nonzero((dense != 0).any(0))[0])
+    assert a.nzc == len(a.nzc_ids)
+
+
+def test_generators_shapes(gen_matrices):
+    for name, m in gen_matrices.items():
+        assert m.nnz > 0, name
+        assert m.indices.max() < m.nrows
+
+
+def test_symmetrize(gen_matrices):
+    s = symmetrize(gen_matrices["er"])
+    d = s.to_dense()
+    assert ((d != 0) == (d.T != 0)).all()
