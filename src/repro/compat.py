@@ -1,0 +1,108 @@
+"""JAX version-compatibility shims — the single point of API-drift repair.
+
+Supported JAX: **0.4.37** (the CPU wheel baked into the build image; see
+``requirements.txt``). JAX renames and relocates public APIs between minor
+releases — ``shard_map`` moved from ``jax.experimental.shard_map`` to
+``jax.shard_map``, Pallas-TPU renamed ``TPUCompilerParams`` to
+``CompilerParams`` — and a codebase that spells the new (or old) name at
+every call site breaks wholesale on every such move.
+
+Policy: resolve each drifting symbol **once, here**, trying the newest
+location first and falling back to the older one. Everything else in the
+repo imports from ``repro.compat`` and never references the ``jax.*``
+spelling directly (enforced by grep in review; exercised by
+``tests/test_import_sweep.py``, which imports every ``repro.*`` module so
+the next rename fails loudly at collection time instead of deep inside a
+subprocess assertion). When you hit the next rename: add a resolver below
+with the same try-new/fallback-old shape, migrate call sites, and note the
+supported-version change in ROADMAP.md "Open items".
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import Mesh
+
+__all__ = ["shard_map", "tpu_compiler_params", "cpu_device_mesh",
+           "host_device_count_flag"]
+
+
+# ---------------------------------------------------------------------------
+# shard_map: jax.shard_map (>= 0.6) vs jax.experimental.shard_map (<= 0.5)
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):
+    _shard_map_impl = jax.shard_map
+    _SHARD_MAP_TAKES_CHECK_REP = False
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+    _SHARD_MAP_TAKES_CHECK_REP = True
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    """Version-robust ``shard_map``.
+
+    ``check_rep=False`` is portable here: honoured by the legacy
+    experimental impl, silently dropped on the modern ``jax.shard_map``
+    (which renamed the knob). Pass it only at call sites whose traced body
+    the legacy replication checker cannot handle (it predates some
+    primitives, e.g. ``checkpoint_name``'s, and rejects them with
+    ``NotImplementedError: No replication rule``); everywhere else keep the
+    checker on — it catches out_specs that claim replication that was never
+    established.
+    """
+    if not _SHARD_MAP_TAKES_CHECK_REP:
+        kwargs.pop("check_rep", None)
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Pallas-TPU compiler params: CompilerParams (new) vs TPUCompilerParams (old)
+# ---------------------------------------------------------------------------
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(*, dimension_semantics: Optional[Sequence[str]] = None,
+                        **kwargs):
+    """Build the Pallas-TPU compiler-params struct under either name.
+
+    ``dimension_semantics`` is the tuple of per-grid-axis annotations
+    ("parallel" / "arbitrary") every kernel in this repo passes; further
+    fields (``vmem_limit_bytes``, ...) forward unchanged.
+    """
+    if dimension_semantics is not None:
+        kwargs["dimension_semantics"] = tuple(dimension_semantics)
+    return _COMPILER_PARAMS_CLS(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# host-platform device ring (fake multi-device CPU meshes)
+# ---------------------------------------------------------------------------
+
+def host_device_count_flag(n: int) -> str:
+    """The XLA flag that fakes ``n`` host devices (must be set in the
+    environment before the first jax backend initialisation)."""
+    return f"--xla_force_host_platform_device_count={n}"
+
+
+def cpu_device_mesh(n: int, axis: str = "p") -> Mesh:
+    """A 1D ``Mesh`` over the first ``n`` visible devices.
+
+    This is the ring-setup used by the shard_map SpGEMM executor and the
+    multi-device subprocess tests. Raises with the exact XLA flag to set
+    when the process was started with fewer devices than requested.
+    """
+    devs = jax.devices()
+    if len(devs) < n:
+        raise ValueError(
+            f"need {n} devices, have {len(devs)}; relaunch with "
+            f"XLA_FLAGS={host_device_count_flag(n)} in the environment "
+            "(jax locks the device count at first init)")
+    return Mesh(np.array(devs[:n]), (axis,))

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import cpu_device_mesh, shard_map
 from .blocksparse import BlockSparse, build_schedule, from_csc
 from .plan import BYTES_PER_NNZ, Partition1D
 from .sparse import CSC, hstack_partitions
@@ -335,12 +336,7 @@ def run_device_spgemm(plan: DeviceSpGEMMPlan,
     """Execute the plan across the devices of ``mesh`` and decode C."""
     Pn = plan.nparts
     if mesh is None:
-        devs = jax.devices()[:Pn]
-        if len(devs) < Pn:
-            raise ValueError(
-                f"need {Pn} devices, have {len(jax.devices())}; set "
-                "XLA_FLAGS=--xla_force_host_platform_device_count")
-        mesh = Mesh(np.array(devs), (axis,))
+        mesh = cpu_device_mesh(Pn, axis)
 
     sharded = NamedSharding(mesh, P(axis))
     args = [jax.device_put(x, sharded) for x in (
@@ -348,7 +344,7 @@ def run_device_spgemm(plan: DeviceSpGEMMPlan,
         plan.a_slot, plan.b_slot, plan.c_slot)]
 
     body = _make_step_fn(plan, axis)
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         body, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
         out_specs=P(axis)))

@@ -1,10 +1,13 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
+launch.py        shared pallas_call path: compiler params (via
+                 repro.compat), dimension semantics, interpret policy
 bsr_spgemm/      scheduled block-sparse matmul — the local SpGEMM engine
 flash_attention/ causal flash attention (GQA, sliding window, softcap)
 moe_gemm/        grouped expert GEMM over capacity buckets (MoE dispatch)
 
-Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
-model-facing wrapper) and ref.py (pure-jnp oracle); tests sweep shapes and
-dtypes asserting allclose against the oracle in interpret mode.
+Each kernel ships kernel.py (body + geometry, launched via launch.launch),
+ops.py (jit'd model-facing wrapper) and ref.py (pure-jnp oracle); tests
+sweep shapes and dtypes asserting allclose against the oracle in interpret
+mode.
 """

@@ -25,11 +25,14 @@ payload skip the redundant DMA (Pallas revisiting elision).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ..launch import launch
 
 __all__ = ["bsr_spgemm_pallas"]
 
@@ -68,7 +71,7 @@ def _kernel(
     static_argnames=("nprod", "nc", "bs", "interpret", "out_dtype"))
 def bsr_spgemm_pallas(a_tiles, b_tiles, a_slot, b_slot, c_slot, flags,
                       *, nprod: int, nc: int, bs: int,
-                      interpret: bool = False, out_dtype=jnp.float32):
+                      interpret: Optional[bool] = None, out_dtype=jnp.float32):
     """Run the product schedule; returns (nc, bs, bs) output payloads.
 
     a_tiles / b_tiles : (na, bs, bs), (nb, bs, bs) payload stacks
@@ -93,12 +96,11 @@ def bsr_spgemm_pallas(a_tiles, b_tiles, a_slot, b_slot, c_slot, flags,
         scratch_shapes=[pltpu.VMEM((bs, bs), jnp.float32)],
     )
 
-    return pl.pallas_call(
+    return launch(
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nc, bs, bs), out_dtype),
         interpret=interpret,
         # products that hit the same output tile must execute in order
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        dimension_semantics=("arbitrary",),
     )(a_slot, b_slot, c_slot, flags, a_tiles, b_tiles)

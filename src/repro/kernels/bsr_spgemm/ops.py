@@ -10,7 +10,6 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -47,8 +46,6 @@ def local_spgemm_device(a: BlockSparse, b: BlockSparse,
             orig_shape=(a.orig_shape[0], b.orig_shape[1]),
             bs=bs,
         )
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
     a_dev = jnp.asarray(a.tiles)
     b_dev = jnp.asarray(b.tiles)
     if use_kernel:

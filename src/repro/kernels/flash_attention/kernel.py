@@ -23,11 +23,14 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ..launch import launch
 
 __all__ = ["flash_attention_pallas"]
 
@@ -106,7 +109,7 @@ def flash_attention_pallas(q, k, v, *, scale: float = 1.0,
                            causal: bool = True, window: int = 0,
                            softcap: float = 0.0,
                            bq: int = 128, bk: int = 128,
-                           interpret: bool = False):
+                           interpret: Optional[bool] = None):
     """q, k, v: (BH, S, D) with matched heads (GQA folded by the wrapper).
 
     Returns (BH, S, D) in q.dtype. S must divide by bq and bk; the wrapper
@@ -123,7 +126,7 @@ def flash_attention_pallas(q, k, v, *, scale: float = 1.0,
         _attn_kernel, scale=scale, causal=causal, window=window,
         softcap=softcap, bq=bq, bk=bk, nk=nk)
 
-    return pl.pallas_call(
+    return launch(
         kernel,
         grid=(bh, nq, nk),
         in_specs=[
@@ -138,7 +141,6 @@ def flash_attention_pallas(q, k, v, *, scale: float = 1.0,
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(q, k, v)

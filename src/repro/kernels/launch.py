@@ -1,0 +1,80 @@
+"""Unified Pallas kernel launcher — one configuration path for every kernel.
+
+Each kernel in this package used to call ``pl.pallas_call`` directly with
+near-identical boilerplate: a grid (or scalar-prefetch grid spec), block
+specs, ``dimension_semantics`` wrapped in a version-sensitive compiler-params
+struct, and an interpret flag whose CPU-fallback policy was re-decided per
+call site. ``launch`` folds all of that into one function so a kernel body
+states only its geometry — and gets JAX-version robustness (via
+``repro.compat``) and the backend-aware interpret policy for free.
+
+Adding a kernel: write the body, then call
+
+    launch(body, grid=..., in_specs=[...], out_specs=..., out_shape=...,
+           scratch_shapes=[...], dimension_semantics=(...), interpret=...)
+
+or pass ``grid_spec=`` (e.g. ``pltpu.PrefetchScalarGridSpec``) instead of
+``grid``/``in_specs``/``out_specs``/``scratch_shapes`` when the kernel needs
+scalar-prefetch indexing.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.experimental import pallas as pl
+
+from ..compat import tpu_compiler_params
+
+__all__ = ["launch", "resolve_interpret"]
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """CPU-fallback policy: ``None`` (or "auto") means interpret everywhere
+    except on a real TPU backend; an explicit bool is honoured as-is."""
+    if interpret is None or interpret == "auto":
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def launch(kernel, *, out_shape,
+           grid: Optional[Sequence[int]] = None,
+           in_specs: Optional[Sequence[Any]] = None,
+           out_specs: Any = None,
+           scratch_shapes: Optional[Sequence[Any]] = None,
+           grid_spec: Any = None,
+           dimension_semantics: Optional[Sequence[str]] = None,
+           interpret: Optional[bool] = None,
+           **pallas_kwargs):
+    """Invoke ``pl.pallas_call`` with version-robust compiler params.
+
+    Returns the callable to apply to the kernel operands, exactly like
+    ``pl.pallas_call`` itself. ``grid_spec`` is mutually exclusive with
+    ``grid``/``in_specs``/``out_specs``/``scratch_shapes`` (the spec object
+    already carries them).
+    """
+    if dimension_semantics is not None:
+        pallas_kwargs["compiler_params"] = tpu_compiler_params(
+            dimension_semantics=dimension_semantics)
+    if grid_spec is not None:
+        assert grid is None and in_specs is None and out_specs is None \
+            and scratch_shapes is None, \
+            "grid_spec already carries grid/specs/scratch"
+        pallas_kwargs["grid_spec"] = grid_spec
+    else:
+        # omit None-valued geometry so pallas_call's own defaults
+        # (whole-array specs, empty grid) stay reachable
+        if grid is not None:
+            pallas_kwargs["grid"] = grid
+        if in_specs is not None:
+            pallas_kwargs["in_specs"] = in_specs
+        if out_specs is not None:
+            pallas_kwargs["out_specs"] = out_specs
+        if scratch_shapes is not None:
+            pallas_kwargs["scratch_shapes"] = scratch_shapes
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        interpret=resolve_interpret(interpret),
+        **pallas_kwargs)

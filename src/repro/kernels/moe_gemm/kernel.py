@@ -17,11 +17,14 @@ moves" 1D layout (tokens are A).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from ..launch import launch
 
 __all__ = ["moe_gemm_pallas"]
 
@@ -47,7 +50,7 @@ def _kernel(x_ref, w_ref, y_ref, acc_ref, *, nd: int):
     jax.jit,
     static_argnames=("bt", "bf", "bd", "interpret"))
 def moe_gemm_pallas(x, w, *, bt: int = 128, bf: int = 128, bd: int = 512,
-                    interpret: bool = False):
+                    interpret: Optional[bool] = None):
     """x: (E, cap, d), w: (E, d, f) -> y: (E, cap, f).
 
     Block sizes clamp to the actual dims; cap/d/f must divide by the
@@ -61,7 +64,7 @@ def moe_gemm_pallas(x, w, *, bt: int = 128, bf: int = 128, bd: int = 512,
     nd = d // bd
 
     kernel = functools.partial(_kernel, nd=nd)
-    return pl.pallas_call(
+    return launch(
         kernel,
         grid=(e, cap // bt, f // bf, nd),
         in_specs=[
@@ -71,8 +74,7 @@ def moe_gemm_pallas(x, w, *, bt: int = 128, bf: int = 128, bd: int = 512,
         out_specs=pl.BlockSpec((1, bt, bf), lambda e, m, n, k: (e, m, n)),
         out_shape=jax.ShapeDtypeStruct((e, cap, f), x.dtype),
         scratch_shapes=[pltpu.VMEM((bt, bf), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")),
+        dimension_semantics=("parallel", "parallel", "parallel",
+                             "arbitrary"),
         interpret=interpret,
     )(x, w)

@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -12,7 +14,7 @@ __all__ = ["grouped_gemm"]
 
 
 def grouped_gemm(x, w, *, use_kernel: bool = True,
-                 interpret: bool = True):
+                 interpret: Optional[bool] = None):
     """x: (E, cap, d), w: (E, d, f) -> (E, cap, f), padding dims to the
     kernel's block multiples. Differentiable (kernel fwd, einsum bwd)."""
     if not use_kernel:

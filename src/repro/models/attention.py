@@ -84,7 +84,7 @@ def _attend(q, k, v, cfg: ModelConfig, window: int,
 
 
 def attn_train(params, cfg: ModelConfig, x, *, window: int = 0,
-               use_kernel: bool = True, interpret: bool = True):
+               use_kernel: bool = True, interpret: Optional[bool] = None):
     """x: (B, S, d) -> (B, S, d); full causal self-attention."""
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
@@ -104,7 +104,7 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def attn_prefill(params, cfg: ModelConfig, x, cache: KVCache, *,
                  window: int = 0, use_kernel: bool = True,
-                 interpret: bool = True) -> Tuple[jax.Array, KVCache]:
+                 interpret: Optional[bool] = None) -> Tuple[jax.Array, KVCache]:
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
     q, k, v = _project_qkv(params, cfg, x, positions)

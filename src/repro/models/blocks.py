@@ -61,7 +61,7 @@ def block_cache_init(cfg: ModelConfig, kind: str, batch: int, max_len: int,
 
 def block_apply(params, cfg: ModelConfig, kind: str, h,
                 cache: Optional[Any] = None, mode: str = "train",
-                *, use_kernel: bool = True, interpret: bool = True):
+                *, use_kernel: bool = True, interpret: Optional[bool] = None):
     """Returns (h, new_cache, aux_loss)."""
     window = cfg.window if kind == "l" else 0
     aux = jnp.zeros((), jnp.float32)

@@ -39,6 +39,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import shard_map
 from ..configs.base import ModelConfig, MoEConfig
 from ..kernels.moe_gemm import grouped_gemm
 from ..sharding import current_rules, shard
@@ -203,8 +204,11 @@ def _moe_shard_map(params, cfg: ModelConfig, x, rules,
                  {"moe/routed_tokens": P(), "moe/capacity_slots": P(),
                   "moe/dropped": P()})
 
-    fn = jax.shard_map(local, mesh=rules.mesh,
-                       in_specs=in_specs, out_specs=out_specs)
+    # check_rep off: the body traces checkpoint_name, which the legacy
+    # replication checker has no rule for (see repro.compat.shard_map)
+    fn = shard_map(local, mesh=rules.mesh,
+                   in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
     y, aux, metrics = fn(
         x, params["router"], params.get("experts_gate"),
         params["experts_up"], params["experts_down"],
@@ -214,7 +218,7 @@ def _moe_shard_map(params, cfg: ModelConfig, x, rules,
 
 def moe_apply(params, cfg: ModelConfig, x,
               *, use_kernel: bool = True,
-              interpret: bool = True) -> Tuple[jax.Array, jax.Array, dict]:
+              interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array, dict]:
     """x: (B, S, d) -> (y, aux_loss, metrics)."""
     rules = current_rules()
     moe = cfg.moe

@@ -87,7 +87,7 @@ def _make_period_body(cfg: ModelConfig, mode: str, use_kernel: bool,
 
 
 def _run_stack(params, cfg: ModelConfig, h, mode: str, caches=None,
-               use_kernel: bool = True, interpret: bool = True):
+               use_kernel: bool = True, interpret: Optional[bool] = None):
     h = shard(h, "batch", None, None)
     aux0 = jnp.zeros((), jnp.float32)
     with_cache = caches is not None
@@ -129,7 +129,7 @@ def _run_stack(params, cfg: ModelConfig, h, mode: str, caches=None,
 
 
 def train_logits(params, cfg: ModelConfig, batch, *,
-                 use_kernel: bool = True, interpret: bool = True):
+                 use_kernel: bool = True, interpret: Optional[bool] = None):
     h = _embed_input(params, cfg, batch)
     h, aux, _ = _run_stack(params, cfg, h, "train",
                            use_kernel=use_kernel, interpret=interpret)
@@ -189,7 +189,7 @@ def _chunked_ce(params, cfg: ModelConfig, h, labels, n_chunks: int):
 
 
 def loss_fn(params, cfg: ModelConfig, batch, *,
-            use_kernel: bool = True, interpret: bool = True,
+            use_kernel: bool = True, interpret: Optional[bool] = None,
             loss_chunks: Optional[int] = None):
     """Next-token cross entropy. batch: tokens/embeds + 'labels' (B, S)."""
     h = _embed_input(params, cfg, batch)
@@ -227,7 +227,7 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def prefill_step(params, cfg: ModelConfig, batch, caches, *,
-                 use_kernel: bool = True, interpret: bool = True):
+                 use_kernel: bool = True, interpret: Optional[bool] = None):
     h = _embed_input(params, cfg, batch)
     h, _, new_caches = _run_stack(params, cfg, h, "prefill", caches,
                                   use_kernel=use_kernel,
@@ -239,7 +239,7 @@ def prefill_step(params, cfg: ModelConfig, batch, caches, *,
 
 
 def decode_step(params, cfg: ModelConfig, batch, caches, *,
-                use_kernel: bool = True, interpret: bool = True):
+                use_kernel: bool = True, interpret: Optional[bool] = None):
     """batch: one token per sequence; caches from prefill/init."""
     h = _embed_input(params, cfg, batch)
     h, _, new_caches = _run_stack(params, cfg, h, "decode", caches,

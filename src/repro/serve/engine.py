@@ -36,7 +36,7 @@ class GenerationResult:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
                  batch_slots: int = 4, eos_id: int = -1,
-                 use_kernel: bool = False, interpret: bool = True):
+                 use_kernel: bool = False, interpret: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len

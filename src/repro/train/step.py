@@ -41,7 +41,7 @@ def init_train_state(cfg: ModelConfig, params,
 
 
 def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
-                    *, use_kernel: bool = False, interpret: bool = True,
+                    *, use_kernel: bool = False, interpret: Optional[bool] = None,
                     compress_grads: bool = False,
                     microbatches: int = 1) -> Callable:
     """``microbatches > 1`` = gradient accumulation: the global batch is
@@ -96,7 +96,7 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
 
 
 def make_eval_step(cfg: ModelConfig, *, use_kernel: bool = False,
-                   interpret: bool = True) -> Callable:
+                   interpret: Optional[bool] = None) -> Callable:
     def eval_step(params, batch):
         _, metrics = loss_fn(params, cfg, batch,
                              use_kernel=use_kernel, interpret=interpret)
@@ -106,7 +106,7 @@ def make_eval_step(cfg: ModelConfig, *, use_kernel: bool = False,
 
 
 def make_prefill_step(cfg: ModelConfig, *, use_kernel: bool = False,
-                      interpret: bool = True) -> Callable:
+                      interpret: Optional[bool] = None) -> Callable:
     def step(params, batch, caches):
         return prefill_step(params, cfg, batch, caches,
                             use_kernel=use_kernel, interpret=interpret)
@@ -115,7 +115,7 @@ def make_prefill_step(cfg: ModelConfig, *, use_kernel: bool = False,
 
 
 def make_decode_step(cfg: ModelConfig, *, use_kernel: bool = False,
-                     interpret: bool = True) -> Callable:
+                     interpret: Optional[bool] = None) -> Callable:
     def step(params, batch, caches):
         return decode_step(params, cfg, batch, caches,
                            use_kernel=use_kernel, interpret=interpret)

@@ -1,0 +1,192 @@
+"""Vendored mini property-testing harness (dependency-free hypothesis stand-in).
+
+The build image cannot ``pip install hypothesis``, so the four property-test
+modules (test_sparse, test_blocksparse, test_plan, test_local_spgemm) run on
+this ~150-line shrink-free replacement instead. It mirrors exactly the
+hypothesis subset the suite uses —
+
+    from _propcheck import given, settings, strategies as st
+
+    @given(st.integers(1, 20), st.integers(0, 2**31))
+    @settings(max_examples=40, deadline=None)
+    def test_property(n, seed): ...
+
+— so every property reads (and checks) the same as before. The API is kept
+deliberately small: ``integers`` / ``sampled_from`` / ``composite`` plus the
+domain strategies below; grow it only alongside a test that uses the new
+strategy (``test_propcheck.py`` exercises the harness itself). Differences
+from real hypothesis, by design:
+
+  * deterministic: case ``i`` of a test draws from a numpy Generator seeded
+    by (stable hash of the test's qualified name, ``i``); reruns repeat the
+    exact same cases, so a red test is reproducible with no database;
+  * shrink-free: on failure the drawn values are reported as-is (cases here
+    are small by construction, shrinking buys little);
+  * strategies are plain "draw a value from an rng" closures — no symbolic
+    filtering/assume machinery.
+
+Domain strategies for this repo (random CSC matrices with controlled
+shape/density and their dense oracles) live here too, so sparse-format
+property tests share one construction path.
+"""
+
+from __future__ import annotations
+
+import functools
+import types
+import zlib
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "Strategy"]
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    """A value generator: ``example(rng)`` draws one value."""
+
+    def __init__(self, draw_fn: Callable[[np.random.Generator], Any],
+                 label: str = "strategy"):
+        self._draw = draw_fn
+        self.label = label
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"<{self.label}>"
+
+
+# ---------------------------------------------------------------------------
+# primitive strategies (the hypothesis.strategies subset the suite uses)
+# ---------------------------------------------------------------------------
+
+def integers(lo: int, hi: int) -> Strategy:
+    """Uniform integer in [lo, hi], both ends inclusive (hypothesis-style)."""
+    return Strategy(lambda rng: int(rng.integers(lo, hi + 1)),
+                    f"integers({lo}, {hi})")
+
+
+def sampled_from(elements: Sequence) -> Strategy:
+    elements = list(elements)
+    return Strategy(lambda rng: elements[int(rng.integers(len(elements)))],
+                    f"sampled_from({elements!r})")
+
+
+def composite(fn: Callable) -> Callable:
+    """``@composite`` builder: ``fn(draw, *args)`` with ``draw(strategy)``."""
+    @functools.wraps(fn)
+    def make(*args, **kwargs) -> Strategy:
+        return Strategy(lambda rng: fn(_Draw(rng), *args, **kwargs),
+                        fn.__name__)
+    return make
+
+
+class _Draw:
+    """The ``draw`` callable handed to @composite functions."""
+
+    def __init__(self, rng: np.random.Generator):
+        self.rng = rng
+
+    def __call__(self, strategy: Strategy):
+        return strategy.example(self.rng)
+
+
+# ---------------------------------------------------------------------------
+# domain strategies: random sparse matrices + dense oracles
+# ---------------------------------------------------------------------------
+
+def dense_sparse_array(min_rows=1, max_rows=24, min_cols=1, max_cols=24,
+                       density=0.25) -> Strategy:
+    """A random (rows, cols) float64 array with ~density nonzeros."""
+    def draw(rng):
+        m = int(rng.integers(min_rows, max_rows + 1))
+        n = int(rng.integers(min_cols, max_cols + 1))
+        return ((rng.random((m, n)) < density)
+                * rng.standard_normal((m, n)))
+    return Strategy(draw, "dense_sparse_array")
+
+
+def csc_with_dense(min_rows=1, max_rows=24, min_cols=1, max_cols=24,
+                   density=0.25) -> Strategy:
+    """(repro CSC matrix, dense oracle) pair with controlled shape/nnz."""
+    arr = dense_sparse_array(min_rows, max_rows, min_cols, max_cols, density)
+
+    def draw(rng):
+        from repro.core import from_dense
+        dense = arr.example(rng)
+        return from_dense(dense), dense
+    return Strategy(draw, "csc_with_dense")
+
+
+def csr_with_dense(**kwargs) -> Strategy:
+    """(row-major view, dense) — the CSC of Aᵀ is the CSR of A."""
+    base = csc_with_dense(**kwargs)
+
+    def draw(rng):
+        mat, dense = base.example(rng)
+        return mat.transpose(), dense.T
+    return Strategy(draw, "csr_with_dense")
+
+
+strategies = types.SimpleNamespace(
+    integers=integers, sampled_from=sampled_from, composite=composite,
+    dense_sparse_array=dense_sparse_array,
+    csc_with_dense=csc_with_dense, csr_with_dense=csr_with_dense,
+)
+
+
+# ---------------------------------------------------------------------------
+# test driver
+# ---------------------------------------------------------------------------
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Attach run parameters; composes with @given in either order."""
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: Strategy):
+    """Run the wrapped test once per drawn case (shrink-free, deterministic).
+
+    The wrapped function must take exactly one positional parameter per
+    strategy (pytest fixtures are not mixed into property tests here).
+    """
+    def deco(fn):
+        seed = zlib.crc32(f"{fn.__module__}::{fn.__qualname__}".encode())
+
+        def runner():
+            # read at call time so @settings works above or below @given
+            max_examples = getattr(runner, "_propcheck_max_examples",
+                                   DEFAULT_MAX_EXAMPLES)
+            for case in range(max_examples):
+                rng = np.random.default_rng((seed, case))
+                drawn = [s.example(rng) for s in strats]
+                try:
+                    fn(*drawn)
+                except Exception as exc:
+                    shown = ", ".join(
+                        f"{s.label}={_short(v)}"
+                        for s, v in zip(strats, drawn))
+                    raise AssertionError(
+                        f"{fn.__name__} falsified on case {case}/"
+                        f"{max_examples} (seed {seed}): {shown}") from exc
+
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__module__ = fn.__module__
+        runner.__doc__ = fn.__doc__
+        if hasattr(fn, "_propcheck_max_examples"):
+            runner._propcheck_max_examples = fn._propcheck_max_examples
+        return runner
+    return deco
+
+
+def _short(value, limit: int = 80) -> str:
+    text = repr(value)
+    return text if len(text) <= limit else text[:limit] + "…"

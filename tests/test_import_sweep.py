@@ -1,0 +1,53 @@
+"""Import every ``repro.*`` module — the API-drift tripwire.
+
+JAX renames public APIs between minor releases (``jax.shard_map``,
+``pltpu.TPUCompilerParams`` → ``CompilerParams``, ...). Call sites resolve
+those names through ``repro.compat``, and this sweep makes the next rename
+fail loudly at test-collection time — one red test per broken module —
+instead of deep inside a subprocess-spawned assertion where the traceback
+is a truncated stderr string.
+"""
+
+import importlib
+import os
+import pkgutil
+
+import pytest
+
+
+def _all_modules():
+    pkg = importlib.import_module("repro")
+    names = ["repro"]
+    for info in pkgutil.walk_packages(pkg.__path__, prefix="repro."):
+        names.append(info.name)
+    return sorted(names)
+
+
+@pytest.mark.parametrize("name", _all_modules())
+def test_module_imports(name):
+    # repro.launch.dryrun mutates XLA_FLAGS at import (deliberately, for its
+    # 512-device dry-run meshes); keep the sweep side-effect-free so later
+    # subprocess-spawning tests inherit a clean environment.
+    env_before = dict(os.environ)
+    try:
+        importlib.import_module(name)
+    finally:
+        os.environ.clear()
+        os.environ.update(env_before)
+
+
+def test_compat_is_the_only_drift_point():
+    """The resolved shims exist and are callable — the contract every
+    migrated call site relies on."""
+    from repro import compat
+
+    assert callable(compat.shard_map)
+    params = compat.tpu_compiler_params(
+        dimension_semantics=("parallel", "arbitrary"))
+    assert tuple(params.dimension_semantics) == ("parallel", "arbitrary")
+    assert "--xla_force_host_platform_device_count=8" \
+        == compat.host_device_count_flag(8)
+    mesh = compat.cpu_device_mesh(1, axis="p")
+    assert mesh.shape["p"] == 1
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        compat.cpu_device_mesh(10_000)

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core import (BOOL_OR_AND, MIN_PLUS, PLUS_TIMES, from_dense,
                         spadd, spgemm, spgemm_flops, spgemm_structure)

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core import (Partition1D, build_fetch_plan, block_fetch_groups,
                         cv_over_mema, erdos_renyi, banded_clustered,

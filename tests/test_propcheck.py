@@ -1,0 +1,118 @@
+"""Self-tests for the vendored property-test harness (tests/_propcheck.py).
+
+The harness underpins the four sparse-invariant property modules, so its own
+contract — deterministic draws, real falsification, both decorator orders,
+correct matrix strategies — is pinned here.
+"""
+
+import numpy as np
+import pytest
+from _propcheck import given, settings, strategies as st
+
+
+def test_falsification_reports_case_and_values():
+    calls = []
+
+    @given(st.integers(1, 5))
+    @settings(max_examples=50, deadline=None)
+    def prop(n):
+        calls.append(n)
+        assert n < 5
+
+    with pytest.raises(AssertionError, match=r"falsified on case \d+/50"):
+        prop()
+    assert 5 in calls                       # the counterexample was reached
+    assert calls[-1] == 5                   # ...and stopped the run
+
+
+def test_draws_are_deterministic_across_runs():
+    runs = []
+
+    @given(st.integers(0, 10**6), st.sampled_from(["a", "b", "c"]))
+    @settings(max_examples=8, deadline=None)
+    def prop(n, tag):
+        runs.append((n, tag))
+
+    prop()
+    first = list(runs)
+    runs.clear()
+    prop()
+    assert runs == first
+
+
+def test_settings_order_and_default():
+    counts = {"above": 0, "below": 0, "default": 0}
+
+    @settings(max_examples=7)
+    @given(st.integers(0, 1))
+    def above(n):
+        counts["above"] += 1
+
+    @given(st.integers(0, 1))
+    @settings(max_examples=9)
+    def below(n):
+        counts["below"] += 1
+
+    @given(st.integers(0, 1))
+    def default(n):
+        counts["default"] += 1
+
+    above(); below(); default()
+    assert counts == {"above": 7, "below": 9,
+                      "default": __import__("_propcheck").DEFAULT_MAX_EXAMPLES}
+
+
+def test_integers_bounds_inclusive():
+    seen = set()
+
+    @given(st.integers(3, 5))
+    @settings(max_examples=200, deadline=None)
+    def prop(n):
+        seen.add(n)
+        assert 3 <= n <= 5
+
+    prop()
+    assert seen == {3, 4, 5}
+
+
+def test_composite_draw_protocol():
+    @st.composite
+    def pair(draw, hi):
+        a = draw(st.integers(0, hi))
+        b = draw(st.integers(0, hi))
+        return a, b
+
+    @given(pair(4))
+    @settings(max_examples=30, deadline=None)
+    def prop(p):
+        a, b = p
+        assert 0 <= a <= 4 and 0 <= b <= 4
+
+    prop()
+
+
+@given(st.csc_with_dense(max_rows=12, max_cols=10, density=0.3))
+@settings(max_examples=20, deadline=None)
+def test_csc_strategy_matches_dense_oracle(pair):
+    mat, dense = pair
+    assert mat.shape == dense.shape
+    np.testing.assert_allclose(mat.to_dense(), dense)
+
+
+@given(st.csr_with_dense(max_rows=12, max_cols=10, density=0.3))
+@settings(max_examples=20, deadline=None)
+def test_csr_strategy_is_transposed_view(pair):
+    mat, dense = pair
+    # the CSR view is the CSC of Aᵀ: still (matrix, matching dense oracle)
+    assert mat.shape == dense.shape
+    np.testing.assert_allclose(mat.to_dense(), dense)
+
+
+@given(st.dense_sparse_array(max_rows=16, max_cols=16, density=0.2))
+@settings(max_examples=20, deadline=None)
+def test_dense_strategy_density_and_shape(arr):
+    m, n = arr.shape
+    assert 1 <= m <= 16 and 1 <= n <= 16
+    # density is a target, not a guarantee — but all-nonzero would mean the
+    # mask was dropped
+    assert np.count_nonzero(arr) <= arr.size

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core import (CSC, from_coo, from_dense, identity, permute_cols,
                         permute_rows, permute_symmetric, spadd, spgemm,
@@ -10,18 +10,9 @@ from repro.core import (CSC, from_coo, from_dense, identity, permute_cols,
 from repro.core.sparse import hstack_partitions
 
 
-def rand_csc(draw, m, n, density=0.2, seed=0):
-    rng = np.random.default_rng(seed)
-    dense = (rng.random((m, n)) < density) * rng.standard_normal((m, n))
-    return from_dense(dense), dense
-
-
-@st.composite
-def csc_and_dense(draw):
-    m = draw(st.integers(1, 24))
-    n = draw(st.integers(1, 24))
-    seed = draw(st.integers(0, 2**31))
-    return rand_csc(draw, m, n, density=0.25, seed=seed)
+def csc_and_dense():
+    """(CSC, dense oracle) pairs via the harness's matrix strategy."""
+    return st.csc_with_dense(max_rows=24, max_cols=24, density=0.25)
 
 
 @given(csc_and_dense())

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verify — the one command for builder and CI.
+#
+#   tools/verify.sh            # full quiet suite
+#   tools/verify.sh -x -k moe  # extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -q "$@"
