@@ -59,13 +59,16 @@ def strategies(a: CSC, nparts: int):
 
 
 class Csv:
-    """Collect `name,value,derived` rows; print at the end."""
+    """Collect `name,value,derived` rows; print (or export) at the end."""
 
     def __init__(self, bench: str):
         self.bench = bench
         self.rows: List[str] = []
+        self.entries: List[dict] = []   # raw values, for --json export
 
     def add(self, name: str, value, derived: str = ""):
+        self.entries.append(dict(bench=self.bench, name=name,
+                                 value=value, derived=derived))
         if isinstance(value, float):
             value = f"{value:.6g}"
         self.rows.append(f"{self.bench},{name},{value},{derived}")

@@ -1,17 +1,113 @@
-"""Device-ring static-shape accounting: exact vs padded bytes.
+"""Device-ring accounting + planner/engine wall-clock benchmarks.
 
-The TPU translation of Algorithm 1 pads each ring step's payload to the
-max over pairs (DESIGN.md §2 "static-shape honesty"). This benchmark
-quantifies the padding tax across process counts and tile sizes, on the
-structured vs unstructured inputs — the structured case both fetches less
-AND pads less (uniform per-pair loads after clustering).
+Three measurements per run:
+
+  * static-shape honesty: exact vs padded ring bytes across process counts
+    and tile sizes (DESIGN.md §2) — the structured input both fetches less
+    AND pads less;
+  * planner micro-benchmark: the vectorized payload-need computation
+    (``payload_need_maps``: one ``hit[:, gcols]`` gather + grouped reduceat
+    per owner) against the seed's per-(src,dst) per-tile Python loop with
+    dict rebuilds, at nparts=8 on a ~1e5-nnz input. The vectorization win
+    is *measured* here — ``tools/bench_smoke.sh`` fails if it drops
+    below 5×;
+  * engine wall time: the same plan executed with ``engine="pallas"`` (the
+    scheduled revisit-free kernel, interpret mode off-TPU) and
+    ``engine="jnp"`` (segment-sum reference), so both engines show up in
+    ``BENCH_paper_figs.json``.
 """
 
 from __future__ import annotations
 
-from repro.core.spgemm_1d_device import build_device_plan
+import numpy as np
 
-from .common import Csv, datasets
+from repro.core.sparse import erdos_renyi
+from repro.core.spgemm_1d_device import (_blockize_parts, _snap_to_tiles,
+                                         build_device_plan, compile_ring,
+                                         payload_need_maps)
+from repro.core.plan import Partition1D
+
+from .common import Csv, datasets, timer
+
+
+def _reference_pair_payload(a_parts, col_tile_off, hit, nblocks, src, dst):
+    """The seed planner's per-tile loop (pre-vectorization), kept verbatim
+    as the micro-benchmark baseline — including the per-pair grouping
+    rebuild it used to pay."""
+    ap = a_parts[src]
+    gcols = ap.tile_cols + col_tile_off[src]
+    need = hit[dst, gcols]
+    if nblocks is not None and ap.ntiles:
+        nz = np.unique(ap.tile_cols)
+        k = min(nblocks, len(nz))
+        bounds = np.linspace(0, len(nz), k + 1).astype(np.int64)
+        grp_of_nz = np.searchsorted(bounds, np.arange(len(nz)),
+                                    side="right") - 1
+        col2grp = {int(c): int(g) for c, g in zip(nz, grp_of_nz)}
+        grp_hit = np.zeros(k, dtype=bool)
+        for t in range(ap.ntiles):
+            if need[t]:
+                grp_hit[col2grp[int(ap.tile_cols[t])]] = True
+        need = np.array([grp_hit[col2grp[int(c)]] for c in ap.tile_cols],
+                        dtype=bool)
+    return np.nonzero(need)[0].astype(np.int32)
+
+
+def _planner_microbench(csv: Csv, scale: int) -> None:
+    nparts, bs, nblocks = 8, 64, 8
+    n = 4096 * scale
+    a = erdos_renyi(n, n, 24.0, seed=7)          # ~1e5 nnz at scale 1
+    part_k = _snap_to_tiles(Partition1D.balanced(a.ncols, nparts), bs)
+    part_n = Partition1D.balanced(a.ncols, nparts)
+    a_parts = _blockize_parts(a, part_k, bs, np.float32)
+    b_parts = _blockize_parts(a, part_n, bs, np.float32)
+    kg = -(-a.ncols // bs)
+    hit = np.zeros((nparts, kg), dtype=bool)
+    for i, bp in enumerate(b_parts):
+        hit[i, bp.tile_rows] = True
+    col_tile_off = [part_k.part_slice(j)[0] // bs for j in range(nparts)]
+
+    def run_reference():
+        return [[_reference_pair_payload(a_parts, col_tile_off, hit,
+                                         nblocks, src, dst)
+                 for dst in range(nparts)] for src in range(nparts)]
+
+    def run_vectorized():
+        need_all = payload_need_maps(a_parts, col_tile_off, hit, nblocks)
+        return [[np.nonzero(need_all[src][dst])[0].astype(np.int32)
+                 for dst in range(nparts)] for src in range(nparts)]
+
+    ref_out, vec_out = run_reference(), run_vectorized()
+    assert all(np.array_equal(r, v)
+               for rr, vv in zip(ref_out, vec_out) for r, v in zip(rr, vv))
+
+    t_ref = timer(run_reference)
+    t_vec = timer(run_vectorized, repeats=3)
+    csv.add("planner/nnz", a.nnz)
+    csv.add("planner/reference_s", t_ref, "seed per-tile loop, all P^2 pairs")
+    csv.add("planner/vectorized_s", t_vec, "payload_need_maps, all P^2 pairs")
+    csv.add("planner/speedup_x", t_ref / max(t_vec, 1e-12),
+            "smoke floor: 5x (tools/bench_smoke.sh)")
+    plan = build_device_plan(a, a, nparts=nparts, bs=bs, nblocks=nblocks)
+    csv.add("planner/full_plan_s", plan.stats["plan_seconds"],
+            f"P={nparts} bs={bs} nblocks={nblocks}")
+
+
+def _engine_bench(csv: Csv, data) -> None:
+    # nparts=1 keeps the ring on the parent process's single device while
+    # still running the real shard_map + scheduled-compute path. The jitted
+    # callable is compiled once (compile_ring) and executions of the same
+    # compiled fn are timed — not re-tracing.
+    import jax
+
+    a = data["hv15r-like"]
+    plan = build_device_plan(a, a, nparts=1, bs=64)
+    for engine in ("pallas", "jnp"):
+        fn, args = compile_ring(plan, engine=engine)
+        jax.block_until_ready(fn(*args))         # warm the jit cache
+        t = timer(lambda: jax.block_until_ready(fn(*args)), repeats=3)
+        csv.add(f"engine={engine}/wall_s", t,
+                f"nprod={plan.stats['nprod_max']} bs=64, compiled")
 
 
 def main(scale: int = 1) -> Csv:
@@ -27,8 +123,13 @@ def main(scale: int = 1) -> Csv:
                 csv.add(f"{dname}/P={nparts}/bs={bs}/exact_MB",
                         exact / 2**20)
                 csv.add(f"{dname}/P={nparts}/bs={bs}/padded_MB",
-                        padded / 2**20,
-                        f"padding tax x{padded / max(exact, 1):.2f}")
+                        padded / 2**20)
+                csv.add(f"{dname}/P={nparts}/bs={bs}/padding_tax_x",
+                        padded / max(exact, 1))
+                csv.add(f"{dname}/P={nparts}/bs={bs}/plan_s",
+                        plan.stats["plan_seconds"])
+    _planner_microbench(csv, scale)
+    _engine_bench(csv, data)
     return csv
 
 

@@ -1,11 +1,18 @@
 """Run every paper-figure benchmark; print ``bench,name,value,derived`` CSV.
 
-  PYTHONPATH=src python -m benchmarks.run [--scale N]
+  PYTHONPATH=src python -m benchmarks.run [--scale N] [--only SUBSTR]
+                                          [--json [PATH]]
+
+``--json`` additionally writes the collected rows (raw values, plus
+planner wall-time and padded/exact ratios from ``device_ring``) to
+``BENCH_paper_figs.json`` — the recorded bench trajectory that
+``tools/bench_smoke.sh`` checks for perf regressions.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -22,25 +29,46 @@ MODULES = [
     device_ring,
 ]
 
+DEFAULT_JSON = "BENCH_paper_figs.json"
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--only", type=str, default=None,
+                    help="run only modules whose name contains SUBSTR")
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
+                    metavar="PATH",
+                    help=f"also write rows as JSON (default {DEFAULT_JSON})")
     args = ap.parse_args(argv)
 
+    modules = [m for m in MODULES
+               if args.only is None or args.only in m.__name__]
+    if not modules:
+        print(f"# no benchmark matches --only {args.only!r}", file=sys.stderr)
+        return 1
+
     print("bench,name,value,derived")
+    entries = []
     failures = 0
-    for mod in MODULES:
+    for mod in modules:
         t0 = time.perf_counter()
         try:
             csv = mod.main(scale=args.scale)
             csv.emit()
+            entries.extend(csv.entries)
             print(f"# {mod.__name__}: ok "
                   f"({time.perf_counter() - t0:.1f}s)", file=sys.stderr)
         except Exception:
             failures += 1
             traceback.print_exc()
             print(f"# {mod.__name__}: FAILED", file=sys.stderr)
+
+    if args.json is not None:
+        with open(args.json, "w") as fh:
+            json.dump(dict(scale=args.scale, failures=failures,
+                           rows=entries), fh, indent=1)
+        print(f"# wrote {len(entries)} rows to {args.json}", file=sys.stderr)
     return 1 if failures else 0
 
 

@@ -31,13 +31,14 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from .sparse import CSC, from_coo
+from .sparse import CSC, _segment_indices, from_coo
 
 __all__ = [
     "BlockSparse",
     "ProductSchedule",
     "from_csc",
     "build_schedule",
+    "flags_from_c_slot",
     "DEFAULT_BLOCK",
 ]
 
@@ -123,9 +124,10 @@ def from_csc(a: CSC, bs: int = DEFAULT_BLOCK,
         uniq_keys = np.zeros(0, dtype=np.int64)
     ntiles = len(uniq_keys)
     tiles = np.zeros((ntiles, bs, bs), dtype=dtype)
-    slot_of_key = {int(k): i for i, k in enumerate(uniq_keys)}
-    slot = np.array([slot_of_key[int(k)] for k in key], dtype=np.int64) \
-        if len(key) else np.zeros(0, dtype=np.int64)
+    # uniq_keys is sorted, so every key resolves to its slot in one
+    # searchsorted — no per-nonzero Python dict probing
+    slot = np.searchsorted(uniq_keys, key) if len(key) \
+        else np.zeros(0, dtype=np.int64)
     tiles[slot, rows % bs, cols % bs] = vals.astype(dtype)
     return BlockSparse(
         tiles=tiles,
@@ -161,14 +163,10 @@ class ProductSchedule:
     nc: int
     flops: int
 
-    def first_visit(self) -> np.ndarray:
-        """(nprod,) bool: product s is the first touching its output tile —
-        drives the accumulator-reset predicate in the kernel."""
-        fv = np.empty(self.nprod, dtype=bool)
-        if self.nprod:
-            fv[0] = True
-            np.not_equal(self.c_slot[1:], self.c_slot[:-1], out=fv[1:])
-        return fv
+    def flags(self) -> np.ndarray:
+        """(nprod,) i32 first/last-visit flag words for the kernel —
+        see :func:`flags_from_c_slot`."""
+        return flags_from_c_slot(self.c_slot)
 
 
 def build_schedule(a: BlockSparse, b: BlockSparse) -> ProductSchedule:
@@ -181,34 +179,25 @@ def build_schedule(a: BlockSparse, b: BlockSparse) -> ProductSchedule:
     assert a.bs == b.bs
     gm = a.grid[0]
 
-    # join on the contraction tile index k: A tile (i, k) × B tile (k, j)
+    # join on the contraction tile index k: A tile (i, k) × B tile (k, j).
+    # Fully vectorized cartesian expansion: each A tile (k-sorted) pairs
+    # with the contiguous run of B tiles sharing its k — repeat on the A
+    # side, one segment gather on the B side. No Python loop over k.
     order_a = np.argsort(a.tile_cols, kind="stable")
     order_b = np.argsort(b.tile_rows, kind="stable")
-    ak = a.tile_cols[order_a]
-    bk = b.tile_rows[order_b]
+    ak = a.tile_cols[order_a].astype(np.int64)
 
-    # counts per k on each side, then cartesian expansion per k
     nk = a.grid[1]
-    ca = np.bincount(ak, minlength=nk)
-    cb = np.bincount(bk, minlength=nk)
-    starts_a = np.concatenate([[0], np.cumsum(ca)])
+    cb = np.bincount(b.tile_rows, minlength=nk).astype(np.int64)
     starts_b = np.concatenate([[0], np.cumsum(cb)])
 
-    a_sl, b_sl = [], []
-    for k in range(nk):
-        na_, nb_ = ca[k], cb[k]
-        if na_ == 0 or nb_ == 0:
-            continue
-        ia = order_a[starts_a[k]:starts_a[k] + na_]
-        ib = order_b[starts_b[k]:starts_b[k] + nb_]
-        a_sl.append(np.repeat(ia, nb_))
-        b_sl.append(np.tile(ib, na_))
-    if not a_sl:
+    nb_per_a = cb[ak]
+    a_slot = np.repeat(order_a, nb_per_a)
+    b_slot = order_b[_segment_indices(starts_b[ak], nb_per_a)]
+    if len(a_slot) == 0:
         z = np.zeros(0, dtype=np.int64)
         return ProductSchedule(z, z, z, z.astype(np.int32),
                                z.astype(np.int32), 0, 0, 0)
-    a_slot = np.concatenate(a_sl)
-    b_slot = np.concatenate(b_sl)
 
     # output tile coordinates and dedup to slots
     oi = a.tile_rows[a_slot].astype(np.int64)
@@ -228,3 +217,22 @@ def build_schedule(a: BlockSparse, b: BlockSparse) -> ProductSchedule:
         nc=len(uniq_keys),
         flops=2 * len(a_slot) * a.bs ** 3,
     )
+
+
+def flags_from_c_slot(c_slot: np.ndarray) -> np.ndarray:
+    """Pack first/last-visit booleans into the kernel's i32 flag word.
+
+    ``c_slot`` is any ``(..., nprod)`` nondecreasing output-slot array —
+    a ProductSchedule's, or the padded per-device stack of the ring plan
+    (whose pad entries all map to one trailing garbage slot, so they form
+    a well-flagged segment of their own). Bit 0: first visit of the slot
+    (accumulator reset); bit 1: last visit (flush).
+    """
+    c = np.asarray(c_slot)
+    first = np.ones(c.shape, dtype=bool)
+    last = np.ones(c.shape, dtype=bool)
+    if c.shape[-1]:
+        change = c[..., 1:] != c[..., :-1]
+        first[..., 1:] = change
+        last[..., :-1] = change
+    return first.astype(np.int32) | (last.astype(np.int32) << 1)

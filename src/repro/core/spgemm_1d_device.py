@@ -17,20 +17,36 @@ tile-column ids per owner). What remains on device is static-shaped:
     bytes are reported next to the exact planned bytes — the price of
     static shapes is visible, not hidden);
   * a per-device product schedule (see ``blocksparse.build_schedule``)
-    executed by the Pallas bsr kernel or its jnp segment-sum reference.
+    over the combined post-fetch stack (own tiles ++ per-step receives),
+    executed by the revisit-free Pallas bsr kernel: products are streamed
+    in output-slot order, a VMEM accumulator is reset on each first visit
+    and flushed on each last visit, so no O(nprod·bs²) intermediate is ever
+    materialized. Schedule pad entries point at payload slot 0 and at a
+    trailing garbage output slot that is dropped after the call, which
+    keeps both engines mask-free. The ``jnp`` segment-sum formulation of
+    the same schedule is retained as a selectable reference engine
+    (``engine="jnp"``); ``engine="auto"`` resolves to the Pallas kernel,
+    which CPU CI exercises through interpret mode
+    (``launch.resolve_interpret``).
 
 The paper's block-fetch strategy (Algorithm 2) appears here twice: the tile
 side length ``bs`` is the fetch granularity (a tile column is fetched iff it
 intersects a required element column), and ``nblocks`` optionally coarsens
 further by grouping tile-columns, bounding per-pair fragment counts exactly
 like the paper bounds RDMA message counts.
+
+Planner invariant: plan construction contains **no Python-level per-tile
+loops** — payload needs, block-fetch grouping, product schedules, and the
+output decode are all computed with array ops (see ROADMAP.md). Loops over
+devices / ring steps (O(P), O(P²) with vectorized bodies) are fine; loops
+over tiles or nonzeros are not.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
+import time
 from typing import List, Optional, Tuple
 
 import jax
@@ -39,11 +55,17 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import cpu_device_mesh, shard_map
-from .blocksparse import BlockSparse, build_schedule, from_csc
+from ..kernels.bsr_spgemm.kernel import bsr_spgemm_pallas
+from ..kernels.bsr_spgemm.ref import bsr_spgemm_ref
+from .blocksparse import (BlockSparse, build_schedule, flags_from_c_slot,
+                          from_csc)
 from .plan import BYTES_PER_NNZ, Partition1D
-from .sparse import CSC, hstack_partitions
+from .sparse import CSC, from_coo, hstack_partitions
 
-__all__ = ["DeviceSpGEMMPlan", "build_device_plan", "run_device_spgemm"]
+__all__ = ["DeviceSpGEMMPlan", "build_device_plan", "compile_ring",
+           "run_device_spgemm", "payload_need_maps", "ENGINES"]
+
+ENGINES = ("pallas", "jnp")
 
 
 # ---------------------------------------------------------------------------
@@ -60,16 +82,19 @@ class DeviceSpGEMMPlan:
     a_tiles: np.ndarray        # (P, na_max, bs, bs)
     b_tiles: np.ndarray        # (P, nb_max, bs, bs)
     send_slots: np.ndarray     # (P, S_total) i32: per-step packed slot ids, -1 pad
-    # per-device product schedule over the post-fetch combined stack:
-    a_slot: np.ndarray         # (P, nprod_max) i32 (-1 pad)
+    # per-device product schedule over the post-fetch combined stack
+    # (pad products: a_slot/b_slot 0, c_slot nc_max — the garbage slot):
+    a_slot: np.ndarray         # (P, nprod_max) i32
     b_slot: np.ndarray         # (P, nprod_max) i32
     c_slot: np.ndarray         # (P, nprod_max) i32
+    flags: np.ndarray          # (P, nprod_max) i32 bit0 first / bit1 last visit
     # static step geometry:
     step_sizes: Tuple[int, ...]   # max payload count per ring step (len P-1)
     nc_max: int
-    # decode info (host): output tile coords per device
-    c_coords: List[Tuple[np.ndarray, np.ndarray]]
-    c_counts: np.ndarray
+    # decode info (host): output tile coords per device, 0-padded past counts
+    c_rows: np.ndarray         # (P, nc_max) i32
+    c_cols: np.ndarray         # (P, nc_max) i32
+    c_counts: np.ndarray       # (P,) real output-tile count per device
     part_n: Partition1D
     out_shape: Tuple[int, int]
     # accounting:
@@ -79,18 +104,62 @@ class DeviceSpGEMMPlan:
 
 
 def _snap_to_tiles(part: Partition1D, bs: int) -> Partition1D:
-    """Round interior split points to multiples of ``bs`` (monotone)."""
+    """Round interior split points to multiples of ``bs`` (monotone).
+
+    Interior points are capped at ``ncols`` *before* the monotone sweep —
+    rounding up past the end (bs > part width at the tail) must yield empty
+    trailing parts, not grow the partition beyond the matrix.
+    """
     splits = part.splits.copy()
-    splits[1:-1] = (splits[1:-1] + bs // 2) // bs * bs
-    splits = np.maximum.accumulate(splits)
-    splits[1:-1] = np.minimum(splits[1:-1], splits[-1])
-    return Partition1D(splits)
+    splits[1:-1] = np.minimum((splits[1:-1] + bs // 2) // bs * bs,
+                              splits[-1])
+    return Partition1D(np.maximum.accumulate(splits))
 
 
 def _blockize_parts(mat: CSC, part: Partition1D, bs: int,
                     dtype) -> List[BlockSparse]:
     return [from_csc(mat.col_slice(*part.part_slice(i)), bs=bs, dtype=dtype)
             for i in range(part.nparts)]
+
+
+def payload_need_maps(a_parts: List[BlockSparse],
+                      col_tile_off: List[int],
+                      hit: np.ndarray,
+                      nblocks: Optional[int]) -> List[np.ndarray]:
+    """Per-owner payload-need matrices, one array op pass per owner.
+
+    Returns, for each owner ``src``, a ``(P, ntiles_src)`` bool matrix whose
+    row ``dst`` marks the tiles of ``A_src`` that ``dst``'s plan fetches:
+    tile t is needed iff its global tile-col is hit by ``H_dst`` —
+    optionally coarsened by the Algorithm-2 ``nblocks`` grouping (the
+    owner's distinct nonzero tile-cols are cut into ≤ nblocks groups and
+    whole groups are fetched). The grouping is computed once per owner and
+    applied to every destination at once; there is no per-tile Python loop
+    and no per-(src, dst) dict rebuild.
+    """
+    Pn = hit.shape[0]
+    need_all: List[np.ndarray] = []
+    for src, ap in enumerate(a_parts):
+        if not ap.ntiles:
+            need_all.append(np.zeros((Pn, 0), dtype=bool))
+            continue
+        gcols = ap.tile_cols + col_tile_off[src]
+        need = hit[:, gcols]                       # (P, ntiles_src)
+        if nblocks is not None:
+            nz = np.unique(ap.tile_cols)
+            k = min(nblocks, len(nz))
+            bounds = np.linspace(0, len(nz), k + 1).astype(np.int64)
+            grp_of_nz = np.searchsorted(bounds, np.arange(len(nz)),
+                                        side="right") - 1
+            # tile_cols is sorted (from_csc orders by (col, row)), so the
+            # per-tile group ids are nondecreasing and each group is one
+            # contiguous run — a single reduceat ORs every run per dst.
+            grp_of_tile = grp_of_nz[np.searchsorted(nz, ap.tile_cols)]
+            starts = np.searchsorted(grp_of_tile, np.arange(k), side="left")
+            grp_hit = np.bitwise_or.reduceat(need, starts, axis=1)
+            need = grp_hit[:, grp_of_tile]
+        need_all.append(need)
+    return need_all
 
 
 def build_device_plan(a: CSC, b: CSC, nparts: int,
@@ -101,6 +170,7 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
                       dtype=np.float32) -> DeviceSpGEMMPlan:
     """Symbolic phase at tile granularity + static-shape padding."""
     assert a.ncols == b.nrows
+    t_plan0 = time.perf_counter()
     Pn = nparts
     if part_k is None:
         part_k = Partition1D.balanced(a.ncols, Pn)
@@ -118,41 +188,12 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
     kg = math.ceil(a.ncols / bs)  # global tile count along k
     hit = np.zeros((Pn, kg), dtype=bool)
     for i, bp in enumerate(b_parts):
-        rows_present = np.unique(bp.tile_rows)
-        hit[i, rows_present] = True
+        hit[i, bp.tile_rows] = True
 
-    # per-owner global tile-col ids of A (tile-level DCSC "JC" lists)
-    owner_tile_cols: List[np.ndarray] = []
-    col_tile_off = []  # global tile-col offset of each owner's local grid
-    for j, ap in enumerate(a_parts):
-        klo, _ = part_k.part_slice(j)
-        off = klo // bs
-        col_tile_off.append(off)
-        owner_tile_cols.append(np.unique(ap.tile_cols) + off)
+    # per-owner global tile-col offsets of A's local grids
+    col_tile_off = [part_k.part_slice(j)[0] // bs for j in range(Pn)]
 
-    # element-level nnz per owner tile-col pair for exact byte accounting
-    def _pair_payload(src: int, dst: int) -> np.ndarray:
-        """payload slot ids of A_src's tiles whose global tile-col is hit
-        by dst's H (optionally coarsened by nblocks grouping)."""
-        ap = a_parts[src]
-        gcols = ap.tile_cols + col_tile_off[src]
-        need = hit[dst, gcols]
-        if nblocks is not None and ap.ntiles:
-            # Algorithm 2 at tile granularity: group the owner's distinct
-            # nonzero tile-cols into ≤ nblocks groups; fetch whole groups.
-            nz = np.unique(ap.tile_cols)
-            k = min(nblocks, len(nz))
-            bounds = np.linspace(0, len(nz), k + 1).astype(np.int64)
-            grp_of_nz = np.searchsorted(bounds, np.arange(len(nz)),
-                                        side="right") - 1
-            col2grp = {int(c): int(g) for c, g in zip(nz, grp_of_nz)}
-            grp_hit = np.zeros(k, dtype=bool)
-            for t in range(ap.ntiles):
-                if need[t]:
-                    grp_hit[col2grp[int(ap.tile_cols[t])]] = True
-            need = np.array([grp_hit[col2grp[int(c)]] for c in ap.tile_cols],
-                            dtype=bool) if ap.ntiles else need
-        return np.nonzero(need)[0].astype(np.int32)
+    need_all = payload_need_maps(a_parts, col_tile_off, hit, nblocks)
 
     # ring steps: at step s, dst i receives from src (i+s) mod P
     step_sizes: List[int] = []
@@ -161,18 +202,15 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
     exact_tiles = 0
     for s in range(1, Pn):
         sends = []
-        mx = 0
         for j in range(Pn):
             dst = (j - s) % Pn
-            slots = _pair_payload(j, dst)
+            slots = np.nonzero(need_all[j][dst])[0].astype(np.int32)
             sends.append(slots)
-            mx = max(mx, len(slots))
             exact_tiles += len(slots)
-        step_sizes.append(mx)
+        step_sizes.append(max((len(sl) for sl in sends), default=0))
         send_per_step.append(sends)
         for i in range(Pn):
-            src = (i + s) % Pn
-            recv_per_dev[i].append(send_per_step[-1][src])
+            recv_per_dev[i].append(sends[(i + s) % Pn])
 
     na_max = max((p.ntiles for p in a_parts), default=0)
     nb_max = max((p.ntiles for p in b_parts), default=0)
@@ -180,7 +218,7 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
 
     a_tiles = np.zeros((Pn, max(na_max, 1), bs, bs), dtype=dtype)
     b_tiles = np.zeros((Pn, max(nb_max, 1), bs, bs), dtype=dtype)
-    send_slots = np.zeros((Pn, max(S_total, 1)), dtype=np.int32)
+    send_slots = np.full((Pn, max(S_total, 1)), -1, dtype=np.int32)
     for j in range(Pn):
         if a_parts[j].ntiles:
             a_tiles[j, :a_parts[j].ntiles] = a_parts[j].tiles
@@ -190,7 +228,6 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
         for s_idx, mx in enumerate(step_sizes):
             sl = send_per_step[s_idx][j]
             send_slots[j, off:off + len(sl)] = sl
-            send_slots[j, off + len(sl):off + mx] = -1
             off += mx
 
     # ---- per-device product schedule over the combined stack ---------------
@@ -199,7 +236,7 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
     # A-view per device with *global* tile cols and stack-slot payload ids.
     max_na = max(na_max, 1)
     sched_a, sched_b, sched_c = [], [], []
-    c_coords, c_counts = [], []
+    crows_l, ccols_l, c_counts = [], [], []
     nprod_max = 0
     nc_max = 0
     for i in range(Pn):
@@ -244,30 +281,39 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
         sched_a.append(vslots[sched.a_slot].astype(np.int32))
         sched_b.append(sched.b_slot)
         sched_c.append(sched.c_slot)
-        c_coords.append((sched.c_rows, sched.c_cols))
+        crows_l.append(sched.c_rows)
+        ccols_l.append(sched.c_cols)
         c_counts.append(sched.nc)
         nprod_max = max(nprod_max, sched.nprod)
         nc_max = max(nc_max, sched.nc)
 
     nprod_max = max(nprod_max, 1)
     nc_max = max(nc_max, 1)
-    A = np.full((Pn, nprod_max), -1, dtype=np.int32)
+    # pad products target the garbage output slot nc_max with payload slot 0:
+    # the engines compute them unmasked and the trailing slot is dropped.
+    A = np.zeros((Pn, nprod_max), dtype=np.int32)
     B = np.zeros((Pn, nprod_max), dtype=np.int32)
-    C = np.zeros((Pn, nprod_max), dtype=np.int32)
+    C = np.full((Pn, nprod_max), nc_max, dtype=np.int32)
+    c_rows = np.zeros((Pn, nc_max), dtype=np.int32)
+    c_cols = np.zeros((Pn, nc_max), dtype=np.int32)
     for i in range(Pn):
         n = len(sched_a[i])
         A[i, :n] = sched_a[i]
         B[i, :n] = sched_b[i]
         C[i, :n] = sched_c[i]
+        c_rows[i, :c_counts[i]] = crows_l[i]
+        c_cols[i, :c_counts[i]] = ccols_l[i]
+    flags = flags_from_c_slot(C)
 
     tile_bytes = bs * bs * np.dtype(dtype).itemsize
     padded_tiles = Pn * S_total
+    plan_seconds = time.perf_counter() - t_plan0
     return DeviceSpGEMMPlan(
         nparts=Pn, bs=bs,
         a_tiles=a_tiles, b_tiles=b_tiles, send_slots=send_slots,
-        a_slot=A, b_slot=B, c_slot=C,
+        a_slot=A, b_slot=B, c_slot=C, flags=flags,
         step_sizes=tuple(step_sizes), nc_max=nc_max,
-        c_coords=c_coords, c_counts=np.array(c_counts),
+        c_rows=c_rows, c_cols=c_cols, c_counts=np.array(c_counts),
         part_n=part_n, out_shape=(a.nrows, b.ncols),
         exact_bytes=exact_tiles * tile_bytes,
         padded_bytes=padded_tiles * tile_bytes,
@@ -275,6 +321,7 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
             na_max=na_max, nb_max=nb_max, nprod_max=int(nprod_max),
             nc_max=int(nc_max), ring_steps=Pn - 1,
             exact_tiles=int(exact_tiles), padded_tiles=int(padded_tiles),
+            plan_seconds=plan_seconds,
         ),
     )
 
@@ -283,20 +330,36 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
 # device execution
 # ---------------------------------------------------------------------------
 
-def _make_step_fn(plan: DeviceSpGEMMPlan, axis: str):
+def resolve_engine(engine: str) -> str:
+    """``"auto"`` resolves to the Pallas scheduled kernel — the product
+    path on every backend (interpret mode covers CPU, cf.
+    ``launch.resolve_interpret``); ``"jnp"`` selects the segment-sum
+    reference formulation."""
+    if engine == "auto":
+        return "pallas"
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES + ('auto',)}, "
+                         f"got {engine!r}")
+    return engine
+
+
+def _make_step_fn(plan: DeviceSpGEMMPlan, axis: str, engine: str,
+                  interpret: Optional[bool]):
     """The per-device body run under shard_map."""
     bs = plan.bs
     Pn = plan.nparts
     step_sizes = plan.step_sizes
     nc_max = plan.nc_max
+    nprod_max = int(plan.a_slot.shape[1])
 
-    def body(a_tiles, b_tiles, send_slots, a_slot, b_slot, c_slot):
+    def body(a_tiles, b_tiles, send_slots, a_slot, b_slot, c_slot, flags):
         # shapes inside shard_map (leading P axis stripped):
         # a_tiles (na_max, bs, bs); send_slots (S_total,); a_slot (nprod,)
         a_tiles = a_tiles[0]
         b_tiles = b_tiles[0]
         send_slots = send_slots[0]
         a_slot, b_slot, c_slot = a_slot[0], b_slot[0], c_slot[0]
+        flags = flags[0]
 
         # ---- fetch phase: ring of collective permutes ----------------------
         recv = [a_tiles]
@@ -316,68 +379,83 @@ def _make_step_fn(plan: DeviceSpGEMMPlan, axis: str):
             off += mx
         stack = jnp.concatenate(recv, axis=0) if len(recv) > 1 else recv[0]
 
-        # ---- compute phase: padded product schedule, segment-sum ----------
-        valid = (a_slot >= 0)
-        a_sel = stack[jnp.clip(a_slot, 0, None)]
-        b_sel = b_tiles[b_slot]
-        prods = jnp.einsum("sij,sjk->sik", a_sel, b_sel,
-                           preferred_element_type=jnp.float32)
-        prods = jnp.where(valid[:, None, None], prods, 0.0)
-        seg = jnp.clip(c_slot, 0, nc_max - 1)
-        out = jax.ops.segment_sum(prods, seg, num_segments=nc_max)
-        return out[None]  # restore leading P axis slot
+        # ---- compute phase: scheduled kernel over the combined stack -------
+        # both engines write pad products into the trailing garbage slot
+        # (nc_max), dropped here; neither needs a validity mask.
+        if engine == "pallas":
+            out = bsr_spgemm_pallas(
+                stack, b_tiles, a_slot, b_slot, c_slot, flags,
+                nprod=nprod_max, nc=nc_max + 1, bs=bs, interpret=interpret)
+        else:
+            out = bsr_spgemm_ref(
+                stack, b_tiles, a_slot, b_slot, c_slot, nc=nc_max + 1)
+        return out[:nc_max][None]  # drop garbage slot, restore P axis slot
 
     return body
 
 
-def run_device_spgemm(plan: DeviceSpGEMMPlan,
-                      mesh: Optional[Mesh] = None,
-                      axis: str = "p") -> CSC:
-    """Execute the plan across the devices of ``mesh`` and decode C."""
-    Pn = plan.nparts
+def compile_ring(plan: DeviceSpGEMMPlan,
+                 mesh: Optional[Mesh] = None,
+                 axis: str = "p",
+                 engine: str = "auto",
+                 interpret: Optional[bool] = None):
+    """Device-put the plan and jit the ring; returns ``(fn, args)``.
+
+    ``fn(*args)`` yields the raw ``(P, nc_max, bs, bs)`` output stacks.
+    Split out from :func:`run_device_spgemm` so benchmarks can warm the
+    jit cache once and time repeated executions of the same compiled
+    callable (a fresh closure per call would re-trace every time).
+    """
+    engine = resolve_engine(engine)
     if mesh is None:
-        mesh = cpu_device_mesh(Pn, axis)
+        mesh = cpu_device_mesh(plan.nparts, axis)
 
     sharded = NamedSharding(mesh, P(axis))
     args = [jax.device_put(x, sharded) for x in (
         plan.a_tiles, plan.b_tiles, plan.send_slots,
-        plan.a_slot, plan.b_slot, plan.c_slot)]
+        plan.a_slot, plan.b_slot, plan.c_slot, plan.flags)]
 
-    body = _make_step_fn(plan, axis)
+    body = _make_step_fn(plan, axis, engine, interpret)
+    # check_rep=False: the legacy replication checker has no rule for
+    # pallas_call (see repro.compat.shard_map); nothing here is replicated.
     fn = jax.jit(shard_map(
         body, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
-        out_specs=P(axis)))
+        in_specs=(P(axis),) * 7,
+        out_specs=P(axis), check_rep=False))
+    return fn, args
+
+
+def run_device_spgemm(plan: DeviceSpGEMMPlan,
+                      mesh: Optional[Mesh] = None,
+                      axis: str = "p",
+                      engine: str = "auto",
+                      interpret: Optional[bool] = None) -> CSC:
+    """Execute the plan across the devices of ``mesh`` and decode C."""
+    Pn = plan.nparts
+    fn, args = compile_ring(plan, mesh, axis, engine, interpret)
     out = np.asarray(fn(*args))  # (P, nc_max, bs, bs)
 
     # ---- decode to a global CSC --------------------------------------------
+    # One batched nonzero scan over every device's output stack. Tiles past
+    # each device's real count are zeroed first: the Pallas engine never
+    # writes them (revisit-free flush touches exactly the scheduled slots),
+    # so their payloads are unspecified.
     bs = plan.bs
-    parts = []
-    from .sparse import from_coo
-    for i in range(Pn):
-        nlo, nhi = plan.part_n.part_slice(i)
-        rows_t, cols_t = plan.c_coords[i]
-        nc = plan.c_counts[i]
-        width = nhi - nlo
-        rows_l, cols_l, vals_l = [], [], []
-        for t in range(nc):
-            tile = out[i, t]
-            rr, cc = np.nonzero(tile)
-            if len(rr) == 0:
-                continue
-            rows_l.append(rr + rows_t[t] * bs)
-            cols_l.append(cc + cols_t[t] * bs)
-            vals_l.append(tile[rr, cc])
-        if rows_l:
-            rows_all = np.concatenate(rows_l)
-            cols_all = np.concatenate(cols_l)
-            vals_all = np.concatenate(vals_l)
-            keep = (rows_all < plan.out_shape[0]) & (cols_all < width)
-            parts.append(from_coo(rows_all[keep], cols_all[keep],
-                                  vals_all[keep],
-                                  (plan.out_shape[0], width)))
-        else:
-            parts.append(from_coo(np.zeros(0, np.int64),
-                                  np.zeros(0, np.int64), np.zeros(0),
-                                  (plan.out_shape[0], width)))
+    widths = plan.part_n.widths()
+    valid_tile = np.arange(plan.nc_max)[None, :] < plan.c_counts[:, None]
+    out = np.where(valid_tile[:, :, None, None], out, 0.0)
+    ii, tt, rr, cc = np.nonzero(out)
+    vals = out[ii, tt, rr, cc]
+    rows_g = rr + plan.c_rows[ii, tt].astype(np.int64) * bs
+    cols_g = cc + plan.c_cols[ii, tt].astype(np.int64) * bs
+    keep = (rows_g < plan.out_shape[0]) & (cols_g < widths[ii])
+    ii, rows_g, cols_g, vals = ii[keep], rows_g[keep], cols_g[keep], vals[keep]
+    bounds = np.searchsorted(ii, np.arange(Pn + 1))
+    parts = [
+        from_coo(rows_g[bounds[i]:bounds[i + 1]],
+                 cols_g[bounds[i]:bounds[i + 1]],
+                 vals[bounds[i]:bounds[i + 1]],
+                 (plan.out_shape[0], int(widths[i])))
+        for i in range(Pn)
+    ]
     return hstack_partitions(parts)

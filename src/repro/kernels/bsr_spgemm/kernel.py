@@ -14,7 +14,12 @@ runs (scalar prefetch is how Pallas TPU does data-dependent tiling). Because
 the schedule is sorted by output slot, each output tile's products are
 contiguous: the accumulator lives in a VMEM scratch, is reset on the first
 visit, and is flushed on the last — output payloads are written exactly once
-(revisit-free).
+(revisit-free). Output slots no product targets are never written and hold
+unspecified payloads; callers that pad a schedule to a static length point
+the pad products at a trailing garbage slot (with valid payload slots and
+flags from ``blocksparse.flags_from_c_slot``) and drop it afterwards — this
+is how the distributed ring (``core/spgemm_1d_device.py``) runs its
+per-device schedules over the combined post-fetch stack, mask-free.
 
 VMEM budget per step: 3 payload tiles (A, B in, C out) + 1 f32 accumulator.
 At bs=128, f32: 4 × 64 KiB = 256 KiB — far under ~16 MiB/core VMEM, so the

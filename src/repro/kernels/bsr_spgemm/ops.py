@@ -13,7 +13,8 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from ...core.blocksparse import BlockSparse, ProductSchedule, build_schedule
+from ...core.blocksparse import (BlockSparse, ProductSchedule, build_schedule,
+                                 flags_from_c_slot)
 from .kernel import bsr_spgemm_pallas
 from .ref import bsr_spgemm_ref
 
@@ -22,12 +23,7 @@ __all__ = ["schedule_flags", "local_spgemm_device"]
 
 def schedule_flags(sched: ProductSchedule) -> np.ndarray:
     """Pack first/last-visit booleans into the kernel's i32 flag word."""
-    first = sched.first_visit()
-    last = np.empty(sched.nprod, dtype=bool)
-    if sched.nprod:
-        last[-1] = True
-        np.not_equal(sched.c_slot[1:], sched.c_slot[:-1], out=last[:-1])
-    return (first.astype(np.int32) | (last.astype(np.int32) << 1))
+    return flags_from_c_slot(sched.c_slot)
 
 
 def local_spgemm_device(a: BlockSparse, b: BlockSparse,

@@ -13,6 +13,13 @@ def bsr_spgemm_ref(a_tiles, b_tiles, a_slot, b_slot, c_slot,
     """Segment-sum formulation of the same schedule.
 
     C[c_slot[s]] += A[a_slot[s]] @ B[b_slot[s]]  for every product s.
+
+    Unlike the Pallas kernel this materializes all ``nprod`` padded
+    products at once (O(nprod·bs²) intermediate) — it is the reference
+    engine, not the product path. Padded schedules follow the same
+    garbage-slot convention (pads target slot ``nc-1``, dropped by the
+    caller); unscheduled segments come back zero here, unspecified from
+    the kernel.
     """
     bs = a_tiles.shape[-1]
     if len(a_slot) == 0:

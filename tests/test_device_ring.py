@@ -34,12 +34,83 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
-def test_ring_on_8_devices():
+GRID_SCRIPT = textwrap.dedent("""
+    import numpy as np
+    from _propcheck import strategies as st
+    from repro.core.sparse import from_dense
+    from repro.core.spgemm_1d import spgemm_1d_simple
+    from repro.core.spgemm_1d_device import build_device_plan, run_device_spgemm
+
+    @st.composite
+    def int_matmul_pair(draw):
+        # integer-valued operands with a shared contraction dim: every
+        # partial sum is exactly representable in f32, so the decoded CSC
+        # must agree BITWISE across engines and with the host oracle.
+        m = draw(st.integers(1, 40))
+        k = draw(st.integers(1, 40))
+        n = draw(st.integers(1, 40))
+        da = np.rint(2 * draw(st.dense_sparse_array(m, m, k, k, 0.25)))
+        db = np.rint(2 * draw(st.dense_sparse_array(k, k, n, n, 0.25)))
+        return from_dense(da), from_dense(db), da, db
+
+    def decoded(plan, engine):
+        c = run_device_spgemm(plan, engine=engine)
+        return c
+
+    CONFIGS = [  # (nparts, bs, nblocks) — small dims make parts empty
+        (2, 8, None),
+        (4, 8, 2),
+        (4, 16, None),
+        (8, 8, 4),
+    ]
+    strat = int_matmul_pair()
+    case = 0
+    for ci, (nparts, bs, nblocks) in enumerate(CONFIGS):
+        for rep in range(3):
+            rng = np.random.default_rng((ci, rep))
+            a, b, da, db = strat.example(rng)
+            plan = build_device_plan(a, b, nparts=nparts, bs=bs,
+                                     nblocks=nblocks)
+            assert plan.exact_bytes <= plan.padded_bytes
+            cp = decoded(plan, "pallas")
+            cj = decoded(plan, "jnp")
+            # engines agree bitwise on the decoded CSC
+            assert np.array_equal(cp.indptr, cj.indptr)
+            assert np.array_equal(cp.indices, cj.indices)
+            assert np.array_equal(cp.data, cj.data), (nparts, bs, nblocks)
+            # and match the host Algorithm-1 oracle bitwise (f32-exact ints;
+            # prune drops the oracle's explicit cancellation zeros)
+            orc = spgemm_1d_simple(a, b, nparts).prune(0.0)
+            assert np.array_equal(cp.indptr, orc.indptr), (nparts, bs, rep)
+            assert np.array_equal(cp.indices, orc.indices)
+            assert np.array_equal(cp.data, orc.data.astype(np.float32))
+            assert np.array_equal(cp.to_dense(), (da @ db).astype(np.float32))
+            case += 1
+    print("CASES", case)
+    print("ALLOK")
+""")
+
+
+def _run_subprocess(script):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=300)
+    here = os.path.dirname(__file__)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "..", "src"), here])
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=300)
+
+
+def test_ring_on_8_devices():
+    out = _run_subprocess(SCRIPT)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "ALLOK" in out.stdout
+
+
+def test_engine_oracle_grid_on_8_devices():
+    """Device-vs-oracle equivalence over (nparts, bs, nblocks, engine),
+    including empty parts and dims that are not multiples of bs."""
+    out = _run_subprocess(GRID_SCRIPT)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "ALLOK" in out.stdout
 

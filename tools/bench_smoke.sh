@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Perf smoke — run the device_ring benchmark at --scale 1 and fail loudly
+# when the planner vectorization win or the byte accounting regresses.
+#
+#   tools/bench_smoke.sh
+#
+# Emits BENCH_paper_figs.json (the recorded bench trajectory) as a side
+# effect; CI should archive it.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m benchmarks.run --scale 1 --only device_ring --json BENCH_paper_figs.json
+
+python - <<'PY'
+import json
+
+rows = {r["name"]: r for r in json.load(open("BENCH_paper_figs.json"))["rows"]
+        if r["bench"] == "device_ring"}
+
+speedup = float(rows["planner/speedup_x"]["value"])
+assert speedup >= 5.0, \
+    f"planner vectorization win regressed: {speedup:.1f}x < 5x floor"
+
+engines = sorted(n for n in rows if n.startswith("engine="))
+assert any("pallas" in n for n in engines), engines
+assert any("jnp" in n for n in engines), engines
+
+for name, r in rows.items():
+    if name.endswith("/padding_tax_x"):
+        assert float(r["value"]) >= 1.0, \
+            f"exact bytes exceed padded bytes at {name}: {r['value']}"
+
+print(f"bench smoke OK: planner speedup {speedup:.1f}x, "
+      f"engines recorded: {', '.join(engines)}")
+PY
