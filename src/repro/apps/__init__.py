@@ -1,2 +1,2 @@
 from .amg import GalerkinResult, galerkin_product
-from .bc import BCResult, bc_batch
+from .bc import BCResult, bc_batch, device_spgemm_fn

@@ -5,6 +5,12 @@ multiplication (RᵀA)·R offers both the 1D algorithm and the outer-product
 variant (Algorithm 3) — the paper (after Ballard et al.) finds the
 outer-product form better for the short-fat × tall-skinny shape, and our
 benchmark reproduces that comparison.
+
+``backend="device"`` runs both multiplies on the device SpGEMM ring
+(``core.spgemm_1d_device``: shard_map fetch + scheduled Pallas kernel) —
+the paper's §IV.B scenario on the product engine instead of the host
+oracle. The right-multiplication algorithm choice collapses to the ring's
+own 1D schedule there (the outer-product variant is a host formulation).
 """
 
 from __future__ import annotations
@@ -30,15 +36,50 @@ class GalerkinResult:
     right_algorithm: str
 
 
+def _galerkin_device(a: CSC, r: CSC, nparts: int, bs: int,
+                     nblocks: Optional[int], engine: str) -> GalerkinResult:
+    from ..core.spgemm_1d_device import build_device_plan, run_device_spgemm
+
+    rt = r.transpose()
+    plan_l = build_device_plan(rt, a, nparts, bs=bs, nblocks=nblocks)
+    rta = run_device_spgemm(plan_l, engine=engine)
+    plan_r = build_device_plan(rta, r, nparts, bs=bs, nblocks=nblocks)
+    coarse = run_device_spgemm(plan_r, engine=engine)
+    return GalerkinResult(
+        coarse=coarse,
+        left_bytes=plan_l.exact_bytes,
+        right_bytes=plan_r.exact_bytes,
+        left_flops=plan_l.stats["dense_flops"],
+        right_flops=plan_r.stats["dense_flops"],
+        right_algorithm=f"device-{engine}",
+    )
+
+
 def galerkin_product(a: CSC, r: Optional[CSC] = None, nparts: int = 8,
                      coarsening: int = 100, nblocks: int = 2048,
-                     right_algorithm: str = "outer") -> GalerkinResult:
+                     right_algorithm: str = "outer",
+                     backend: str = "host",
+                     bs: int = 32,
+                     engine: str = "auto") -> GalerkinResult:
     """Compute RᵀAR with distributed 1D SpGEMMs.
 
     right_algorithm: 'outer' (Algorithm 3, the paper's choice) or '1d'.
+    backend: 'host' (numpy oracle path) or 'device' (Pallas/shard_map ring;
+    ``bs`` is the tile side, ``engine`` selects the ring's compute engine,
+    and flops/bytes are the dense-tile schedule's). ``nparts`` must not
+    exceed the visible device count on the device backend.
     """
     if r is None:
         r = restriction_operator(a, coarsening=coarsening)
+
+    if backend == "device":
+        # element-level nblocks doesn't map to tile-column groups; the ring
+        # plans its own Algorithm-2 grouping when given one (None = exact)
+        return _galerkin_device(a, r, nparts, bs, None, engine)
+    if backend != "host":
+        raise ValueError(f"backend must be 'host' or 'device', got "
+                         f"{backend!r}")
+
     rt = r.transpose()
 
     left = spgemm_1d(rt, a, nparts, nblocks=nblocks)

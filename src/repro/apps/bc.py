@@ -2,11 +2,13 @@
 
 Linear-algebraic Brandes, exactly the CombBLAS formulation the paper
 benchmarks: per batch of K source vertices, a *forward* multi-source BFS
-expands frontiers with SpGEMM over the boolean semiring while accumulating
-shortest-path counts σ, then a *backward sweep* tallies dependency scores
-δ with plus-times SpGEMMs down the BFS levels. Both phases take the
-distributed SpGEMM implementation as a parameter (1D sparsity-aware /
-2D SUMMA / 3D split) so the benchmark compares them on identical work.
+expands frontiers with SpGEMM — plus-times by default, accumulating exact
+shortest-path counts σ as it goes (``fwd_semiring=BOOL_OR_AND`` opts into
+the pure-reachability variant with degenerate 0/1 σ) — then a *backward
+sweep* tallies dependency scores δ with plus-times SpGEMMs down the BFS
+levels. Both phases take the distributed SpGEMM implementation as a
+parameter (1D sparsity-aware / 2D SUMMA / 3D split / device ring) so the
+benchmark compares them on identical work.
 """
 
 from __future__ import annotations
@@ -16,10 +18,12 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
-from ..core import (CSC, BOOL_OR_AND, PLUS_TIMES, from_coo, spadd, spgemm)
+from ..core import (CSC, BOOL_OR_AND, PLUS_TIMES, Semiring, from_coo, spadd,
+                    spgemm)
 from ..core.sparse import permute_symmetric
 
-__all__ = ["bc_batch", "BCResult", "ew_multiply", "ew_mask_not"]
+__all__ = ["bc_batch", "BCResult", "ew_multiply", "ew_mask_not",
+           "device_spgemm_fn"]
 
 
 # ---- elementwise CSC helpers (the EWiseMult/Apply of CombBLAS) -------------
@@ -35,7 +39,11 @@ def ew_multiply(a: CSC, b_dense_col: np.ndarray) -> CSC:
 
 
 def ew_mask_not(a: CSC, visited: np.ndarray) -> CSC:
-    """Keep entries of ``a`` whose *row* is not yet visited[row, col]."""
+    """Keep entries a[i, j] whose *position* is unset in the dense boolean
+    ``visited`` mask — i.e. drop every entry with ``visited[i, j]`` True
+    (CombBLAS ``EWiseMult`` with a negated mask). The mask is per
+    (vertex, source) pair, not per row: vertex i may already be visited in
+    one BFS of the batch while still frontier-new in another."""
     rows, cols, vals = _coo(a)
     keep = ~visited[rows, cols]
     return from_coo(rows[keep], cols[keep], vals[keep], a.shape)
@@ -51,12 +59,20 @@ class BCResult:
 
 
 def bc_batch(a: CSC, sources: np.ndarray,
-             spgemm_fn: Optional[Callable] = None) -> BCResult:
+             spgemm_fn: Optional[Callable] = None,
+             fwd_semiring: Semiring = PLUS_TIMES) -> BCResult:
     """One batch of multi-source Brandes on graph ``a`` (n×n, unweighted).
 
     sources: (b,) vertex ids. ``spgemm_fn(A, B, semiring) -> (CSC, bytes)``
     is the distributed multiply; defaults to the local oracle with zero
     communication.
+
+    ``fwd_semiring`` is routed to ``spgemm_fn`` on the forward frontier
+    expansion (it is not pinned to plus-times): the default accumulates
+    exact shortest-path counts σ; ``BOOL_OR_AND`` runs the frontier as a
+    pure reachability BFS (σ degenerates to 0/1 — the approximate-BC
+    variant). The backward sweep tallies real-valued dependencies and is
+    inherently plus-times.
     """
     n = a.nrows
     b = len(sources)
@@ -75,7 +91,7 @@ def bc_batch(a: CSC, sources: np.ndarray,
     comm = 0
     fwd_calls = 0
     while frontier.nnz:
-        nxt, bytes_ = spgemm_fn(at, frontier, PLUS_TIMES)
+        nxt, bytes_ = spgemm_fn(at, frontier, fwd_semiring)
         comm += bytes_
         fwd_calls += 1
         nxt = ew_mask_not(nxt, visited)            # drop already-visited
@@ -110,3 +126,40 @@ def bc_batch(a: CSC, sources: np.ndarray,
     return BCResult(scores=scores, depths=len(levels),
                     fwd_spgemm_calls=fwd_calls, bwd_spgemm_calls=bwd_calls,
                     comm_bytes=comm)
+
+
+# ---- device-ring adapter ----------------------------------------------------
+
+def device_spgemm_fn(nparts: int = 1, bs: int = 16,
+                     nblocks: Optional[int] = None,
+                     engine: str = "auto",
+                     interpret: Optional[bool] = None) -> Callable:
+    """A ``spgemm_fn`` for :func:`bc_batch` backed by the device SpGEMM ring.
+
+    Every BC multiply (forward frontier expansion *and* backward sweep)
+    plans and executes on the Pallas/shard_map path of
+    ``core.spgemm_1d_device`` under whatever semiring ``bc_batch`` passes —
+    this is the paper's §IV.C scenario on the product engine. ``nparts``
+    must not exceed the visible device count (``nparts=1`` exercises the
+    full shard_map + scheduled-kernel path on a single device); comm bytes
+    are the plan's exact planned payload bytes (zero at nparts=1 — a
+    one-device ring has no fetch steps).
+
+    Plans are frontier-dependent, so each multiply re-plans and re-traces
+    the ring; the loop-invariant A side (the adjacency operand reused at
+    every level) is blockized once and cached across calls.
+    """
+    from ..core.spgemm_1d_device import build_device_plan, run_device_spgemm
+
+    blockize_cache: dict = {}
+
+    def fn(x: CSC, y: CSC, semiring: Semiring):
+        plan = build_device_plan(x, y, nparts, bs=bs, nblocks=nblocks,
+                                 semiring=semiring,
+                                 a_blockize_cache=blockize_cache)
+        c = run_device_spgemm(plan, engine=engine, interpret=interpret)
+        # downstream σ/δ accumulation is float64; the exact small-int
+        # frontier counts survive the f32 payloads unchanged
+        return c.astype(np.float64), plan.exact_bytes
+
+    return fn

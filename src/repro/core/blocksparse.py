@@ -54,6 +54,10 @@ class BlockSparse:
     tile_cols : (ntiles,) tile-grid col of each payload, sorted (col, row)
     shape     : logical (padded) element shape, multiples of bs
     orig_shape: pre-padding element shape
+    fill      : the value absent positions hold — the additive identity of
+                the semiring the tiles execute under (0.0 for plus-times /
+                bool, +inf for min-plus). Distinguishes "absent entry" from
+                "explicitly stored value equal to 0.0".
     """
 
     tiles: np.ndarray
@@ -62,6 +66,7 @@ class BlockSparse:
     shape: Tuple[int, int]
     orig_shape: Tuple[int, int]
     bs: int
+    fill: float = 0.0
 
     @property
     def ntiles(self) -> int:
@@ -76,8 +81,12 @@ class BlockSparse:
         return self.tiles.nbytes
 
     def tile_nnz(self) -> np.ndarray:
-        """Stored-element count per tile (for fill diagnostics)."""
-        return (self.tiles != 0).sum(axis=(1, 2))
+        """Stored-element count per tile (for fill diagnostics).
+
+        ``!=`` against an infinite fill is still correct: inf != inf is
+        False, so identity-padded positions never count as stored.
+        """
+        return (self.tiles != self.fill).sum(axis=(1, 2))
 
     def fill_fraction(self) -> float:
         """nnz / stored payload elements — over-fetch diagnostic."""
@@ -87,16 +96,32 @@ class BlockSparse:
 
     # ---- conversions ------------------------------------------------------
     def to_dense(self) -> np.ndarray:
-        out = np.zeros(self.shape, dtype=self.tiles.dtype)
+        out = np.full(self.shape, self.fill, dtype=self.tiles.dtype)
         bs = self.bs
         for t in range(self.ntiles):
             r, c = self.tile_rows[t] * bs, self.tile_cols[t] * bs
             out[r:r + bs, c:c + bs] = self.tiles[t]
         return out[: self.orig_shape[0], : self.orig_shape[1]]
 
-    def to_csc(self, tol: float = 0.0) -> CSC:
+    def to_csc(self, tol: float = 0.0, semiring=None) -> CSC:
+        """Back to CSC, keeping the entries the semiring considers nonzero.
+
+        Entries are pruned relative to the additive identity — ``fill`` by
+        default, ``semiring.zero`` when one is passed — *not* relative to a
+        literal 0.0: an explicitly stored 0.0 in an identity-filled min-plus
+        container (a zero-cost edge) survives the round trip
+        ``from_csc(..., fill=sr.zero) → to_csc(semiring=sr)``. ``tol``
+        widens the prune band around a *finite* identity only; with an
+        infinite identity the kept set is exactly the finite entries and
+        ``tol`` has no effect (no finite value is near +inf).
+        """
+        zero = self.fill if semiring is None else semiring.zero
         d = self.to_dense()
-        rows, cols = np.nonzero(np.abs(d) > tol)
+        if np.isinf(zero):
+            keep = np.isfinite(d)
+        else:
+            keep = np.abs(d - zero) > tol
+        rows, cols = np.nonzero(keep)
         return from_coo(rows, cols, d[rows, cols], self.orig_shape)
 
     def col_block_ids(self) -> np.ndarray:
@@ -106,8 +131,14 @@ class BlockSparse:
 
 
 def from_csc(a: CSC, bs: int = DEFAULT_BLOCK,
-             dtype=np.float32) -> BlockSparse:
-    """Blockize a CSC matrix: nonempty tiles become dense payloads."""
+             dtype=np.float32, fill: float = 0.0) -> BlockSparse:
+    """Blockize a CSC matrix: nonempty tiles become dense payloads.
+
+    ``fill`` is the additive identity of the executing semiring: positions
+    of a stored tile with no stored entry hold ``fill``, so explicit stored
+    values equal to 0.0 stay distinguishable from absent entries whenever
+    ``fill != 0.0`` (min-plus zero-cost edges).
+    """
     m, n = a.shape
     gm, gn = math.ceil(max(m, 1) / bs), math.ceil(max(n, 1) / bs)
     rows, cols, vals = a.to_coo()
@@ -123,7 +154,7 @@ def from_csc(a: CSC, bs: int = DEFAULT_BLOCK,
     else:
         uniq_keys = np.zeros(0, dtype=np.int64)
     ntiles = len(uniq_keys)
-    tiles = np.zeros((ntiles, bs, bs), dtype=dtype)
+    tiles = np.full((ntiles, bs, bs), fill, dtype=dtype)
     # uniq_keys is sorted, so every key resolves to its slot in one
     # searchsorted — no per-nonzero Python dict probing
     slot = np.searchsorted(uniq_keys, key) if len(key) \
@@ -136,6 +167,7 @@ def from_csc(a: CSC, bs: int = DEFAULT_BLOCK,
         shape=(gm * bs, gn * bs),
         orig_shape=(m, n),
         bs=bs,
+        fill=fill,
     )
 
 

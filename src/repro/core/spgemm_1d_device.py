@@ -29,6 +29,14 @@ tile-column ids per owner). What remains on device is static-shaped:
     which CPU CI exercises through interpret mode
     (``launch.resolve_interpret``).
 
+The whole path is **semiring-generic** (ROADMAP "semiring contract"): the
+plan is built for one :class:`~repro.core.semiring.Semiring`, whose additive
+identity fills every absent tile position, pad payload slot and pad product,
+and whose ``prune_mask`` drives the output decode — no layer ever assumes
+the identity is a literal ``0.0``. That is what lets the betweenness-
+centrality (bool or-and) and shortest-path (min-plus) workloads of §II.C
+run on the same ring/kernel as plus-times.
+
 The paper's block-fetch strategy (Algorithm 2) appears here twice: the tile
 side length ``bs`` is the fetch granularity (a tile column is fetched iff it
 intersects a required element column), and ``nblocks`` optionally coarsens
@@ -60,6 +68,7 @@ from ..kernels.bsr_spgemm.ref import bsr_spgemm_ref
 from .blocksparse import (BlockSparse, build_schedule, flags_from_c_slot,
                           from_csc)
 from .plan import BYTES_PER_NNZ, Partition1D
+from .semiring import PLUS_TIMES, Semiring
 from .sparse import CSC, from_coo, hstack_partitions
 
 __all__ = ["DeviceSpGEMMPlan", "build_device_plan", "compile_ring",
@@ -97,6 +106,9 @@ class DeviceSpGEMMPlan:
     c_counts: np.ndarray       # (P,) real output-tile count per device
     part_n: Partition1D
     out_shape: Tuple[int, int]
+    # the semiring the payloads were built for: every pad above is filled
+    # with its additive identity, and the decode prunes against it
+    semiring: Semiring
     # accounting:
     exact_bytes: int           # planned payload bytes (sum of real tiles moved)
     padded_bytes: int          # what the static-shape ring actually moves
@@ -117,8 +129,9 @@ def _snap_to_tiles(part: Partition1D, bs: int) -> Partition1D:
 
 
 def _blockize_parts(mat: CSC, part: Partition1D, bs: int,
-                    dtype) -> List[BlockSparse]:
-    return [from_csc(mat.col_slice(*part.part_slice(i)), bs=bs, dtype=dtype)
+                    dtype, fill: float = 0.0) -> List[BlockSparse]:
+    return [from_csc(mat.col_slice(*part.part_slice(i)), bs=bs, dtype=dtype,
+                     fill=fill)
             for i in range(part.nparts)]
 
 
@@ -167,8 +180,23 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
                       part_n: Optional[Partition1D] = None,
                       bs: int = 128,
                       nblocks: Optional[int] = None,
-                      dtype=np.float32) -> DeviceSpGEMMPlan:
-    """Symbolic phase at tile granularity + static-shape padding."""
+                      dtype=np.float32,
+                      semiring: Semiring = PLUS_TIMES,
+                      a_blockize_cache: Optional[dict] = None
+                      ) -> DeviceSpGEMMPlan:
+    """Symbolic phase at tile granularity + static-shape padding.
+
+    ``semiring`` fixes the payload fill: every absent tile position, pad
+    slot and pad product is the semiring's additive identity (its
+    multiplicative annihilator too), so the engines stay mask-free under
+    min-plus / bool exactly as under plus-times.
+
+    ``a_blockize_cache``: callers that re-plan against the *same* A many
+    times (BC multiplies one adjacency operand by a fresh frontier every
+    level) pass a dict here to reuse A's blockization across calls. The
+    cache pins the operand object (so the ``id``-based key cannot go
+    stale) and assumes it is not mutated between calls.
+    """
     assert a.ncols == b.nrows
     t_plan0 = time.perf_counter()
     Pn = nparts
@@ -180,8 +208,23 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
     # local tile grids don't embed into the global k tile space
     part_k = _snap_to_tiles(part_k, bs)
 
-    a_parts = _blockize_parts(a, part_k, bs, dtype)
-    b_parts = _blockize_parts(b, part_n, bs, dtype)
+    if a_blockize_cache is None:
+        a_parts = _blockize_parts(a, part_k, bs, dtype, fill=semiring.zero)
+    else:
+        key = (id(a), tuple(int(s) for s in part_k.splits), bs,
+               np.dtype(dtype).str, float(semiring.zero))
+        cached = a_blockize_cache.get(key)
+        if cached is None or cached[0] is not a:
+            cached = (a, _blockize_parts(a, part_k, bs, dtype,
+                                         fill=semiring.zero))
+            # bounded FIFO: callers alternate between a handful of static
+            # operands (BC: Aᵀ forward / A backward); evicting beyond that
+            # keeps the pinned-operand retention O(1), not O(calls)
+            while len(a_blockize_cache) >= 4:
+                a_blockize_cache.pop(next(iter(a_blockize_cache)))
+            a_blockize_cache[key] = cached
+        a_parts = cached[1]
+    b_parts = _blockize_parts(b, part_n, bs, dtype, fill=semiring.zero)
 
     # tile-level hit vectors: device i needs global tile-row g of B_i ⇔ some
     # nonzero of B_i falls in element rows [g*bs, (g+1)*bs)
@@ -216,8 +259,9 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
     nb_max = max((p.ntiles for p in b_parts), default=0)
     S_total = sum(step_sizes)
 
-    a_tiles = np.zeros((Pn, max(na_max, 1), bs, bs), dtype=dtype)
-    b_tiles = np.zeros((Pn, max(nb_max, 1), bs, bs), dtype=dtype)
+    # pad slots hold the additive identity, not literal zeros (semiring fill)
+    a_tiles = semiring.fill((Pn, max(na_max, 1), bs, bs), dtype=dtype)
+    b_tiles = semiring.fill((Pn, max(nb_max, 1), bs, bs), dtype=dtype)
     send_slots = np.full((Pn, max(S_total, 1)), -1, dtype=np.int32)
     for j in range(Pn):
         if a_parts[j].ntiles:
@@ -307,6 +351,7 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
 
     tile_bytes = bs * bs * np.dtype(dtype).itemsize
     padded_tiles = Pn * S_total
+    nprod_total = int(sum(len(s) for s in sched_a))
     plan_seconds = time.perf_counter() - t_plan0
     return DeviceSpGEMMPlan(
         nparts=Pn, bs=bs,
@@ -315,10 +360,13 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
         step_sizes=tuple(step_sizes), nc_max=nc_max,
         c_rows=c_rows, c_cols=c_cols, c_counts=np.array(c_counts),
         part_n=part_n, out_shape=(a.nrows, b.ncols),
+        semiring=semiring,
         exact_bytes=exact_tiles * tile_bytes,
         padded_bytes=padded_tiles * tile_bytes,
         stats=dict(
             na_max=na_max, nb_max=nb_max, nprod_max=int(nprod_max),
+            nprod_total=nprod_total,
+            dense_flops=2 * nprod_total * bs ** 3,
             nc_max=int(nc_max), ring_steps=Pn - 1,
             exact_tiles=int(exact_tiles), padded_tiles=int(padded_tiles),
             plan_seconds=plan_seconds,
@@ -351,6 +399,7 @@ def _make_step_fn(plan: DeviceSpGEMMPlan, axis: str, engine: str,
     step_sizes = plan.step_sizes
     nc_max = plan.nc_max
     nprod_max = int(plan.a_slot.shape[1])
+    semiring = plan.semiring
 
     def body(a_tiles, b_tiles, send_slots, a_slot, b_slot, c_slot, flags):
         # shapes inside shard_map (leading P axis stripped):
@@ -369,9 +418,10 @@ def _make_step_fn(plan: DeviceSpGEMMPlan, axis: str, engine: str,
             if mx == 0:
                 continue
             slots = jax.lax.dynamic_slice_in_dim(send_slots, off, mx)
+            # pad payloads carry the additive identity, like every other pad
             payload = jnp.where(
                 (slots >= 0)[:, None, None],
-                a_tiles[jnp.clip(slots, 0, None)], 0.0)
+                a_tiles[jnp.clip(slots, 0, None)], semiring.zero)
             got = jax.lax.ppermute(
                 payload, axis,
                 perm=[(j, (j - s) % Pn) for j in range(Pn)])
@@ -385,20 +435,38 @@ def _make_step_fn(plan: DeviceSpGEMMPlan, axis: str, engine: str,
         if engine == "pallas":
             out = bsr_spgemm_pallas(
                 stack, b_tiles, a_slot, b_slot, c_slot, flags,
-                nprod=nprod_max, nc=nc_max + 1, bs=bs, interpret=interpret)
+                nprod=nprod_max, nc=nc_max + 1, bs=bs, interpret=interpret,
+                semiring=semiring)
         else:
             out = bsr_spgemm_ref(
-                stack, b_tiles, a_slot, b_slot, c_slot, nc=nc_max + 1)
+                stack, b_tiles, a_slot, b_slot, c_slot, nc=nc_max + 1,
+                semiring=semiring)
         return out[:nc_max][None]  # drop garbage slot, restore P axis slot
 
     return body
+
+
+def _resolve_semiring(plan: DeviceSpGEMMPlan,
+                      semiring: Optional[Semiring]) -> Semiring:
+    """The plan's payloads are identity-filled at build time, so the
+    semiring is baked in; an explicit argument is accepted for call-site
+    clarity but must match the plan."""
+    if semiring is None:
+        return plan.semiring
+    if semiring.name != plan.semiring.name:
+        raise ValueError(
+            f"plan was built for semiring {plan.semiring.name!r} "
+            f"(payload pads are its identity); cannot execute under "
+            f"{semiring.name!r} — rebuild the plan with semiring=")
+    return semiring
 
 
 def compile_ring(plan: DeviceSpGEMMPlan,
                  mesh: Optional[Mesh] = None,
                  axis: str = "p",
                  engine: str = "auto",
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 semiring: Optional[Semiring] = None):
     """Device-put the plan and jit the ring; returns ``(fn, args)``.
 
     ``fn(*args)`` yields the raw ``(P, nc_max, bs, bs)`` output stacks.
@@ -407,6 +475,7 @@ def compile_ring(plan: DeviceSpGEMMPlan,
     callable (a fresh closure per call would re-trace every time).
     """
     engine = resolve_engine(engine)
+    _resolve_semiring(plan, semiring)
     if mesh is None:
         mesh = cpu_device_mesh(plan.nparts, axis)
 
@@ -429,22 +498,28 @@ def run_device_spgemm(plan: DeviceSpGEMMPlan,
                       mesh: Optional[Mesh] = None,
                       axis: str = "p",
                       engine: str = "auto",
-                      interpret: Optional[bool] = None) -> CSC:
+                      interpret: Optional[bool] = None,
+                      semiring: Optional[Semiring] = None) -> CSC:
     """Execute the plan across the devices of ``mesh`` and decode C."""
     Pn = plan.nparts
+    sr = _resolve_semiring(plan, semiring)
     fn, args = compile_ring(plan, mesh, axis, engine, interpret)
     out = np.asarray(fn(*args))  # (P, nc_max, bs, bs)
 
     # ---- decode to a global CSC --------------------------------------------
-    # One batched nonzero scan over every device's output stack. Tiles past
-    # each device's real count are zeroed first: the Pallas engine never
-    # writes them (revisit-free flush touches exactly the scheduled slots),
-    # so their payloads are unspecified.
+    # One batched prune-mask scan over every device's output stack. Tiles
+    # past each device's real count are reset to the additive identity
+    # first: the Pallas engine never writes them (revisit-free flush touches
+    # exactly the scheduled slots), so their payloads are unspecified. The
+    # prune is the semiring's — an entry is dropped iff it equals the
+    # identity (0.0 for plus-times/bool, +inf for min-plus), never by a
+    # literal nonzero test.
     bs = plan.bs
     widths = plan.part_n.widths()
     valid_tile = np.arange(plan.nc_max)[None, :] < plan.c_counts[:, None]
-    out = np.where(valid_tile[:, :, None, None], out, 0.0)
-    ii, tt, rr, cc = np.nonzero(out)
+    out = np.where(valid_tile[:, :, None, None], out,
+                   out.dtype.type(sr.zero))
+    ii, tt, rr, cc = np.nonzero(sr.prune_mask(out))
     vals = out[ii, tt, rr, cc]
     rows_g = rr + plan.c_rows[ii, tt].astype(np.int64) * bs
     cols_g = cc + plan.c_cols[ii, tt].astype(np.int64) * bs

@@ -3,10 +3,19 @@
 The hash/heap local SpGEMM of the paper probes scalar entries — there is no
 MXU analogue. The TPU-native translation keeps the *sparsity* in a static,
 host-built product schedule (see ``core/blocksparse.build_schedule``) and
-makes every unit of work a dense ``bs×bs`` MXU matmul:
+makes every unit of work a dense ``bs×bs`` semiring tile-product:
 
     for s in range(nprod):            # one sequential Pallas grid
-        C[c_slot[s]]  (+)=  A[a_slot[s]] @ B[b_slot[s]]
+        C[c_slot[s]]  (+)=  A[a_slot[s]] ⊗ B[b_slot[s]]
+
+The kernel is **semiring-generic** (ROADMAP "semiring contract"): the
+accumulator resets to ``semiring.zero`` (the additive identity — not a
+literal 0.0, which is the wrong annihilator for min-plus), and each step
+applies ``semiring.jnp_tile_combine``. For plus-times that combine is
+exactly the previous hard-coded MXU path (one f32-accumulating ``jnp.dot``);
+bool or-and stays on the MXU (booleanize → dot → clip → max); min-plus runs
+a VPU fori_loop of rank-1 ``min(acc, col + row)`` updates so no O(bs³)
+intermediate is materialized.
 
 The schedule arrays ride in via ``PrefetchScalarGridSpec`` so the BlockSpec
 ``index_map``s can address the right payload tile of A/B/C *before* the body
@@ -37,6 +46,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...core.semiring import PLUS_TIMES, Semiring
 from ..launch import launch
 
 __all__ = ["bsr_spgemm_pallas"]
@@ -54,6 +64,8 @@ def _kernel(
     c_ref,       # (bs, bs) current C payload (output)
     # ---- scratch ----
     acc_ref,     # (bs, bs) f32 accumulator
+    *,
+    semiring: Semiring,
 ):
     s = pl.program_id(0)
     first = (flags[s] & 1) != 0
@@ -61,10 +73,11 @@ def _kernel(
 
     @pl.when(first)
     def _reset():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        # additive identity, NOT literal zeros (min-plus resets to +inf)
+        acc_ref[...] = jnp.full_like(acc_ref, semiring.zero)
 
-    acc_ref[...] += jnp.dot(
-        a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    acc_ref[...] = semiring.jnp_tile_combine(
+        acc_ref[...], a_ref[...], b_ref[...])
 
     @pl.when(last)
     def _flush():
@@ -73,18 +86,25 @@ def _kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("nprod", "nc", "bs", "interpret", "out_dtype"))
+    static_argnames=("nprod", "nc", "bs", "interpret", "out_dtype",
+                     "semiring"))
 def bsr_spgemm_pallas(a_tiles, b_tiles, a_slot, b_slot, c_slot, flags,
                       *, nprod: int, nc: int, bs: int,
-                      interpret: Optional[bool] = None, out_dtype=jnp.float32):
+                      interpret: Optional[bool] = None, out_dtype=jnp.float32,
+                      semiring: Semiring = PLUS_TIMES):
     """Run the product schedule; returns (nc, bs, bs) output payloads.
 
-    a_tiles / b_tiles : (na, bs, bs), (nb, bs, bs) payload stacks
+    a_tiles / b_tiles : (na, bs, bs), (nb, bs, bs) payload stacks whose
+        absent positions hold ``semiring.zero``
     a_slot/b_slot/c_slot/flags : (nprod,) i32 schedule. Contents are traced
         data (scalar-prefetched); only lengths are static.
+    semiring : static; supplies the accumulator identity and the per-step
+        tile combine (plus-times keeps the single-``jnp.dot`` MXU path).
     """
     if nprod == 0:
-        return jnp.zeros((max(nc, 1), bs, bs), dtype=out_dtype)
+        # an empty schedule's output is all additive identities — for
+        # min-plus that decodes to "empty", not to a dense block of zeros
+        return jnp.full((max(nc, 1), bs, bs), semiring.zero, dtype=out_dtype)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
@@ -102,7 +122,7 @@ def bsr_spgemm_pallas(a_tiles, b_tiles, a_slot, b_slot, c_slot, flags,
     )
 
     return launch(
-        _kernel,
+        functools.partial(_kernel, semiring=semiring),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nc, bs, bs), out_dtype),
         interpret=interpret,

@@ -15,6 +15,7 @@ import numpy as np
 
 from ...core.blocksparse import (BlockSparse, ProductSchedule, build_schedule,
                                  flags_from_c_slot)
+from ...core.semiring import PLUS_TIMES, Semiring
 from .kernel import bsr_spgemm_pallas
 from .ref import bsr_spgemm_ref
 
@@ -28,9 +29,24 @@ def schedule_flags(sched: ProductSchedule) -> np.ndarray:
 
 def local_spgemm_device(a: BlockSparse, b: BlockSparse,
                         *, use_kernel: bool = True,
-                        interpret: Optional[bool] = None) -> BlockSparse:
-    """C = A @ B on device. Falls back to the jnp ref when asked."""
+                        interpret: Optional[bool] = None,
+                        semiring: Semiring = PLUS_TIMES) -> BlockSparse:
+    """C = A ⊗ B on device over ``semiring``. Falls back to the jnp ref
+    when asked. Operand payloads must be identity-filled
+    (``from_csc(..., fill=semiring.zero)``) — a mismatched fill is a
+    silent-corruption hazard (e.g. 0.0-filled tiles under min-plus act as
+    zero-cost edges), so it is rejected here. The result container
+    carries the same fill."""
     assert a.bs == b.bs
+    for name, op in (("a", a), ("b", b)):
+        # float != is the right test: inf != inf is False, so an
+        # inf-filled min-plus operand passes its inf-identity semiring
+        if op.ntiles and op.fill != semiring.zero:
+            raise ValueError(
+                f"operand {name!r} payloads are filled with {op.fill!r} "
+                f"but semiring {semiring.name!r} pads with its identity "
+                f"{semiring.zero!r}; blockize with "
+                f"from_csc(..., fill=semiring.zero)")
     sched = build_schedule(a, b)
     bs = a.bs
     if sched.nprod == 0:
@@ -41,6 +57,7 @@ def local_spgemm_device(a: BlockSparse, b: BlockSparse,
             shape=(a.shape[0], b.shape[1]),
             orig_shape=(a.orig_shape[0], b.orig_shape[1]),
             bs=bs,
+            fill=semiring.zero,
         )
     a_dev = jnp.asarray(a.tiles)
     b_dev = jnp.asarray(b.tiles)
@@ -49,12 +66,13 @@ def local_spgemm_device(a: BlockSparse, b: BlockSparse,
             a_dev, b_dev,
             jnp.asarray(sched.a_slot), jnp.asarray(sched.b_slot),
             jnp.asarray(sched.c_slot), jnp.asarray(schedule_flags(sched)),
-            nprod=sched.nprod, nc=sched.nc, bs=bs, interpret=interpret)
+            nprod=sched.nprod, nc=sched.nc, bs=bs, interpret=interpret,
+            semiring=semiring)
     else:
         out = bsr_spgemm_ref(
             a_dev, b_dev,
             jnp.asarray(sched.a_slot), jnp.asarray(sched.b_slot),
-            jnp.asarray(sched.c_slot), nc=sched.nc)
+            jnp.asarray(sched.c_slot), nc=sched.nc, semiring=semiring)
     return BlockSparse(
         tiles=np.asarray(out),
         tile_rows=sched.c_rows,
@@ -62,4 +80,5 @@ def local_spgemm_device(a: BlockSparse, b: BlockSparse,
         shape=(a.shape[0], b.shape[1]),
         orig_shape=(a.orig_shape[0], b.orig_shape[1]),
         bs=bs,
+        fill=semiring.zero,
     )

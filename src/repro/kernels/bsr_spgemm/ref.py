@@ -2,33 +2,36 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
+
+from ...core.semiring import PLUS_TIMES, Semiring
 
 __all__ = ["bsr_spgemm_ref"]
 
 
 def bsr_spgemm_ref(a_tiles, b_tiles, a_slot, b_slot, c_slot,
-                   *, nc: int, out_dtype=jnp.float32):
-    """Segment-sum formulation of the same schedule.
+                   *, nc: int, out_dtype=jnp.float32,
+                   semiring: Semiring = PLUS_TIMES):
+    """Segment-reduce formulation of the same schedule.
 
-    C[c_slot[s]] += A[a_slot[s]] @ B[b_slot[s]]  for every product s.
+    C[c_slot[s]] (+)= A[a_slot[s]] ⊗ B[b_slot[s]]  for every product s,
+    over the additive monoid of ``semiring``.
 
     Unlike the Pallas kernel this materializes all ``nprod`` padded
     products at once (O(nprod·bs²) intermediate) — it is the reference
     engine, not the product path. Padded schedules follow the same
     garbage-slot convention (pads target slot ``nc-1``, dropped by the
-    caller); unscheduled segments come back zero here, unspecified from
-    the kernel.
+    caller). Unscheduled segments come back as the identity of the
+    underlying jax segment reduce (0 for segment_sum, ±inf for
+    segment_min/max) — unspecified from the kernel; ring callers mask
+    them to ``semiring.zero`` before decoding either way.
     """
     bs = a_tiles.shape[-1]
     if len(a_slot) == 0:
-        return jnp.zeros((max(nc, 1), bs, bs), dtype=out_dtype)
-    prods = jnp.einsum(
-        "sij,sjk->sik",
+        return jnp.full((max(nc, 1), bs, bs), semiring.zero, dtype=out_dtype)
+    prods = semiring.jnp_matmul(
         a_tiles[a_slot].astype(jnp.float32),
         b_tiles[b_slot].astype(jnp.float32),
-        preferred_element_type=jnp.float32,
     )
-    out = jax.ops.segment_sum(prods, c_slot, num_segments=nc)
+    out = semiring.jnp_segment_reduce(prods, c_slot, nc)
     return out.astype(out_dtype)

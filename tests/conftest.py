@@ -14,7 +14,9 @@ def gen_matrices():
     """Small structure-matched analogues of the paper's input families."""
     return {
         "banded": banded_clustered(320, 24, 6.0, seed=1),     # hv15r-like
-        "er": erdos_renyi(256, 256, 5.0, seed=2),             # eukarya-like
+        # same square shape as "banded" so elementwise fixtures (spadd)
+        # can combine the two families without skipping
+        "er": erdos_renyi(320, 320, 5.0, seed=2),             # eukarya-like
         "mesh": laplacian_2d(18),                             # nlpkkt-like
         "community": block_diagonal_noise(256, 8, 6.0, 0.5, seed=3),
         "rmat": rmat(8, 8, seed=4),

@@ -87,6 +87,43 @@ def test_galerkin_correctness(gen_matrices):
         np.testing.assert_allclose(res.coarse.to_dense(), want, atol=1e-8)
 
 
+def test_galerkin_device_backend(gen_matrices):
+    """§IV.B on the product engine: RᵀAR via the device SpGEMM ring
+    (nparts=1 keeps it on the single visible device) matches dense."""
+    a = gen_matrices["mesh"]
+    r = restriction_operator(a, coarsening=20)
+    res = galerkin_product(a, r=r, nparts=1, backend="device", bs=16)
+    want = r.to_dense().T @ a.to_dense() @ r.to_dense()
+    np.testing.assert_allclose(res.coarse.to_dense(), want,
+                               atol=1e-3, rtol=1e-5)
+    assert res.right_algorithm.startswith("device")
+    assert res.left_bytes >= 0 and res.right_bytes >= 0
+    assert res.left_flops > 0 and res.right_flops > 0
+
+
+def test_bc_fwd_semiring_routed():
+    """bc_batch passes its fwd_semiring through to spgemm_fn instead of
+    pinning PLUS_TIMES on the forward frontier expansion."""
+    from repro.core import BOOL_OR_AND
+    a = _graph(seed=2)
+    seen = []
+
+    from repro.core import spgemm
+
+    def probe_fn(x, y, semiring):
+        seen.append(semiring.name)
+        return spgemm(x, y, semiring), 0
+
+    res = bc_batch(a, np.array([1]), spgemm_fn=probe_fn,
+                   fwd_semiring=BOOL_OR_AND)
+    # forward expansion ran under the routed semiring...
+    assert seen[:res.fwd_spgemm_calls] == \
+        ["bool_or_and"] * res.fwd_spgemm_calls
+    # ...and the backward dependency sweep stays plus-times (real-valued)
+    assert seen[res.fwd_spgemm_calls:] == \
+        ["plus_times"] * res.bwd_spgemm_calls
+
+
 def test_restriction_operator_shape(gen_matrices):
     a = gen_matrices["mesh"]
     r = restriction_operator(a, coarsening=30)

@@ -6,7 +6,8 @@ from _propcheck import given, settings, strategies as st
 
 import jax.numpy as jnp
 
-from repro.core import erdos_renyi, banded_clustered, from_dense
+from repro.core import (BOOL_OR_AND, MIN_PLUS, PLUS_TIMES, erdos_renyi,
+                        banded_clustered, from_coo, from_dense, spgemm)
 from repro.core.blocksparse import build_schedule, from_csc
 from repro.kernels.bsr_spgemm import (bsr_spgemm_pallas, bsr_spgemm_ref,
                                       local_spgemm_device, schedule_flags)
@@ -21,6 +22,75 @@ def test_blockize_roundtrip(m, n, seed, bs):
     bsm = from_csc(from_dense(dense), bs=bs)
     np.testing.assert_allclose(bsm.to_dense(), dense.astype(np.float32),
                                atol=1e-6)
+
+
+@given(st.integers(2, 30), st.integers(2, 30), st.integers(0, 2**31),
+       st.sampled_from([4, 8, 16]))
+@settings(max_examples=25, deadline=None)
+def test_csc_roundtrip_preserves_explicit_entries(m, n, seed, bs):
+    """from_csc → to_csc is lossless for entries the semiring considers
+    nonzero — including explicit stored 0.0 values, which an
+    identity-filled min-plus container must NOT conflate with "absent"
+    (they are zero-cost edges)."""
+    rng = np.random.default_rng(seed)
+    nnz = int(rng.integers(1, m * n + 1))
+    flat = rng.choice(m * n, size=nnz, replace=False)
+    vals = rng.integers(-3, 4, size=nnz).astype(np.float64)  # incl. 0.0
+    mat = from_coo(flat % m, flat // m, vals, (m, n))
+    bsm = from_csc(mat, bs=bs, fill=MIN_PLUS.zero)
+    back = bsm.to_csc(semiring=MIN_PLUS)
+    np.testing.assert_array_equal(back.indptr, mat.indptr)
+    np.testing.assert_array_equal(back.indices, mat.indices)
+    np.testing.assert_array_equal(back.data, mat.data.astype(np.float32))
+    # default (fill-relative) prune gives the same answer with no semiring
+    back2 = bsm.to_csc()
+    np.testing.assert_array_equal(back2.data, mat.data.astype(np.float32))
+
+
+def test_local_device_spgemm_all_semirings():
+    """The scheduled kernel and the jnp ref agree bitwise with the host
+    oracle under every registered semiring on int-valued operands."""
+    rng = np.random.default_rng(21)
+    da = np.rint(2 * ((rng.random((40, 33)) < 0.3)
+                      * rng.standard_normal((40, 33))))
+    db = np.rint(2 * ((rng.random((33, 27)) < 0.3)
+                      * rng.standard_normal((33, 27))))
+    a, b = from_dense(da), from_dense(db)
+    for sr in (PLUS_TIMES, BOOL_OR_AND, MIN_PLUS):
+        host = spgemm(a, b, sr)
+        bsa = from_csc(a, bs=8, fill=sr.zero)
+        bsb = from_csc(b, bs=8, fill=sr.zero)
+        for use_kernel in (True, False):
+            dev = local_spgemm_device(bsa, bsb, use_kernel=use_kernel,
+                                      semiring=sr)
+            got = dev.to_csc(semiring=sr)
+            np.testing.assert_array_equal(got.indptr, host.indptr,
+                                          err_msg=sr.name)
+            np.testing.assert_array_equal(got.indices, host.indices)
+            np.testing.assert_array_equal(got.data,
+                                          host.data.astype(np.float32))
+
+
+def test_empty_schedule_min_plus_decodes_empty():
+    """nprod == 0 must return identity payloads: a min-plus empty output
+    decodes to an empty matrix, not to a dense block of zeros."""
+    z = from_csc(from_dense(np.zeros((24, 24))), bs=8, fill=MIN_PLUS.zero)
+    c = local_spgemm_device(z, z, semiring=MIN_PLUS)
+    assert c.ntiles == 0
+    assert c.to_csc(semiring=MIN_PLUS).nnz == 0
+    # the kernel-level early return is identity-filled too
+    import jax.numpy as jnp
+    out = bsr_spgemm_pallas(
+        jnp.zeros((1, 8, 8)), jnp.zeros((1, 8, 8)),
+        jnp.zeros(0, jnp.int32), jnp.zeros(0, jnp.int32),
+        jnp.zeros(0, jnp.int32), jnp.zeros(0, jnp.int32),
+        nprod=0, nc=2, bs=8, interpret=True, semiring=MIN_PLUS)
+    assert np.isinf(np.asarray(out)).all()
+    out_r = bsr_spgemm_ref(
+        jnp.zeros((1, 8, 8)), jnp.zeros((1, 8, 8)),
+        jnp.zeros(0, jnp.int32), jnp.zeros(0, jnp.int32),
+        jnp.zeros(0, jnp.int32), nc=2, semiring=MIN_PLUS)
+    assert np.isinf(np.asarray(out_r)).all()
 
 
 def test_schedule_covers_all_products():

@@ -37,15 +37,17 @@ SCRIPT = textwrap.dedent("""
 GRID_SCRIPT = textwrap.dedent("""
     import numpy as np
     from _propcheck import strategies as st
+    from repro.core import by_name
     from repro.core.sparse import from_dense
-    from repro.core.spgemm_1d import spgemm_1d_simple
+    from repro.core.spgemm_1d import spgemm_1d
     from repro.core.spgemm_1d_device import build_device_plan, run_device_spgemm
 
     @st.composite
     def int_matmul_pair(draw):
         # integer-valued operands with a shared contraction dim: every
-        # partial sum is exactly representable in f32, so the decoded CSC
-        # must agree BITWISE across engines and with the host oracle.
+        # partial sum (and min/max) is exactly representable in f32, so the
+        # decoded CSC must agree BITWISE across engines and with the host
+        # oracle under every semiring.
         m = draw(st.integers(1, 40))
         k = draw(st.integers(1, 40))
         n = draw(st.integers(1, 40))
@@ -53,52 +55,56 @@ GRID_SCRIPT = textwrap.dedent("""
         db = np.rint(2 * draw(st.dense_sparse_array(k, k, n, n, 0.25)))
         return from_dense(da), from_dense(db), da, db
 
-    def decoded(plan, engine):
-        c = run_device_spgemm(plan, engine=engine)
-        return c
-
     CONFIGS = [  # (nparts, bs, nblocks) — small dims make parts empty
         (2, 8, None),
         (4, 8, 2),
         (4, 16, None),
         (8, 8, 4),
     ]
+    SEMIRINGS = ["plus_times", "bool_or_and", "min_plus"]
     strat = int_matmul_pair()
     case = 0
     for ci, (nparts, bs, nblocks) in enumerate(CONFIGS):
-        for rep in range(3):
+        for rep in range(2):
             rng = np.random.default_rng((ci, rep))
             a, b, da, db = strat.example(rng)
-            plan = build_device_plan(a, b, nparts=nparts, bs=bs,
-                                     nblocks=nblocks)
-            assert plan.exact_bytes <= plan.padded_bytes
-            cp = decoded(plan, "pallas")
-            cj = decoded(plan, "jnp")
-            # engines agree bitwise on the decoded CSC
-            assert np.array_equal(cp.indptr, cj.indptr)
-            assert np.array_equal(cp.indices, cj.indices)
-            assert np.array_equal(cp.data, cj.data), (nparts, bs, nblocks)
-            # and match the host Algorithm-1 oracle bitwise (f32-exact ints;
-            # prune drops the oracle's explicit cancellation zeros)
-            orc = spgemm_1d_simple(a, b, nparts).prune(0.0)
-            assert np.array_equal(cp.indptr, orc.indptr), (nparts, bs, rep)
-            assert np.array_equal(cp.indices, orc.indices)
-            assert np.array_equal(cp.data, orc.data.astype(np.float32))
-            assert np.array_equal(cp.to_dense(), (da @ db).astype(np.float32))
-            case += 1
+            for srname in SEMIRINGS:
+                sr = by_name(srname)
+                plan = build_device_plan(a, b, nparts=nparts, bs=bs,
+                                         nblocks=nblocks, semiring=sr)
+                assert plan.exact_bytes <= plan.padded_bytes
+                cp = run_device_spgemm(plan, engine="pallas", semiring=sr)
+                cj = run_device_spgemm(plan, engine="jnp", semiring=sr)
+                # engines agree bitwise on the decoded CSC
+                assert np.array_equal(cp.indptr, cj.indptr), (srname, ci)
+                assert np.array_equal(cp.indices, cj.indices)
+                assert np.array_equal(cp.data, cj.data), (nparts, bs, srname)
+                # and match the host Algorithm-1 oracle bitwise (f32-exact
+                # ints; the plus-times oracle additionally drops its
+                # explicit cancellation zeros — the other semirings prune
+                # by their own identity inside spgemm already)
+                orc = spgemm_1d(a, b, nparts, semiring=sr).concat()
+                if srname == "plus_times":
+                    orc = orc.prune(0.0)
+                    assert np.array_equal(
+                        cp.to_dense(), (da @ db).astype(np.float32))
+                assert np.array_equal(cp.indptr, orc.indptr), (nparts, srname)
+                assert np.array_equal(cp.indices, orc.indices)
+                assert np.array_equal(cp.data, orc.data.astype(np.float32))
+                case += 1
     print("CASES", case)
     print("ALLOK")
 """)
 
 
-def _run_subprocess(script):
+def _run_subprocess(script, timeout=300):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     here = os.path.dirname(__file__)
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(here, "..", "src"), here])
     return subprocess.run([sys.executable, "-c", script], env=env,
-                          capture_output=True, text=True, timeout=300)
+                          capture_output=True, text=True, timeout=timeout)
 
 
 def test_ring_on_8_devices():
@@ -108,11 +114,34 @@ def test_ring_on_8_devices():
 
 
 def test_engine_oracle_grid_on_8_devices():
-    """Device-vs-oracle equivalence over (nparts, bs, nblocks, engine),
-    including empty parts and dims that are not multiples of bs."""
-    out = _run_subprocess(GRID_SCRIPT)
+    """Device-vs-oracle equivalence over (nparts, bs, nblocks, engine,
+    semiring), including empty parts and dims not multiples of bs."""
+    out = _run_subprocess(GRID_SCRIPT, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "ALLOK" in out.stdout
+
+
+def test_bc_device_adapter_matches_oracle():
+    """BC end-to-end on the device ring (§IV.C on the product engine):
+    ``bc_batch`` with the device-ring ``spgemm_fn`` adapter reproduces the
+    local-oracle scores. nparts=1 runs the full shard_map + scheduled
+    Pallas path on the parent process's single device."""
+    from repro.apps import bc_batch, device_spgemm_fn
+    from repro.core import erdos_renyi, from_coo, symmetrize
+
+    a = symmetrize(erdos_renyi(48, 48, 3.0, seed=7))
+    dense = (a.to_dense() != 0).astype(float)
+    np.fill_diagonal(dense, 0)
+    rows, cols = np.nonzero(dense)
+    g = from_coo(rows, cols, np.ones(len(rows)), dense.shape)
+    src = np.array([0, 5, 11])
+
+    res_loc = bc_batch(g, src)
+    res_dev = bc_batch(g, src, spgemm_fn=device_spgemm_fn(nparts=1, bs=16))
+    assert res_dev.depths == res_loc.depths
+    assert res_dev.fwd_spgemm_calls == res_loc.fwd_spgemm_calls
+    np.testing.assert_allclose(res_dev.scores, res_loc.scores,
+                               rtol=1e-5, atol=1e-6)
 
 
 def test_plan_accounting_single_process(gen_matrices):

@@ -1,11 +1,45 @@
 """Local SpGEMM oracle vs dense, over all semirings + flop count property."""
 
 import numpy as np
-import pytest
 from _propcheck import given, settings, strategies as st
 
-from repro.core import (BOOL_OR_AND, MIN_PLUS, PLUS_TIMES, from_dense,
-                        spadd, spgemm, spgemm_flops, spgemm_structure)
+from repro.core import (BOOL_OR_AND, MIN_PLUS, PLUS_TIMES, by_name,
+                        from_dense, spadd, spgemm, spgemm_flops,
+                        spgemm_outer_1d, spgemm_structure)
+
+SEMIRING_NAMES = ["plus_times", "bool_or_and", "min_plus"]
+
+
+def _pos_int_sparse(rng, m, n, density=0.3):
+    """Random sparse array with strictly positive integer values — every
+    semiring result is then exact and unambiguous in a dense comparison
+    (no plus-times cancellation, no min-plus sums equal to the 0.0 that
+    ``to_dense`` uses for absent entries)."""
+    return ((rng.random((m, n)) < density)
+            * rng.integers(1, 5, (m, n))).astype(np.float64)
+
+
+def _dense_mm_oracle(da, db, name):
+    if name == "plus_times":
+        return da @ db
+    if name == "bool_or_and":
+        return (((da != 0).astype(float) @ (db != 0).astype(float)) > 0
+                ).astype(np.float64)
+    wa = np.where(da != 0, da, np.inf)
+    wb = np.where(db != 0, db, np.inf)
+    c = (wa[:, :, None] + wb[None, :, :]).min(axis=1)
+    return np.where(np.isfinite(c), c, 0.0)
+
+
+def _dense_add_oracle(da, db, name):
+    if name == "plus_times":
+        return da + db
+    if name == "bool_or_and":
+        return np.maximum(da, db)         # or == max on positive values
+    wa = np.where(da != 0, da, np.inf)
+    wb = np.where(db != 0, db, np.inf)
+    c = np.minimum(wa, wb)
+    return np.where(np.isfinite(c), c, 0.0)
 
 
 def _rand(m, k, density, seed):
@@ -54,10 +88,52 @@ def test_min_plus_semiring():
 def test_spadd(gen_matrices):
     a = gen_matrices["banded"]
     b = gen_matrices["er"]
-    if a.shape != b.shape:
-        pytest.skip("shape mismatch in fixtures")
+    assert a.shape == b.shape, "fixture families must be shape-compatible"
     np.testing.assert_allclose(spadd(a, b).to_dense(),
                                a.to_dense() + b.to_dense(), atol=1e-12)
+
+
+@given(st.integers(1, 16), st.integers(1, 16), st.integers(1, 16),
+       st.integers(0, 2**31), st.sampled_from(SEMIRING_NAMES))
+@settings(max_examples=36, deadline=None)
+def test_spgemm_all_semirings_match_dense(m, k, n, seed, srname):
+    """Host spgemm vs the dense semiring oracle, exact, incl. tiny dims."""
+    rng = np.random.default_rng(seed)
+    da = _pos_int_sparse(rng, m, k)
+    db = _pos_int_sparse(rng, k, n)
+    c = spgemm(from_dense(da), from_dense(db), by_name(srname))
+    np.testing.assert_array_equal(c.to_dense(),
+                                  _dense_mm_oracle(da, db, srname))
+
+
+@given(st.integers(1, 16), st.integers(1, 16), st.integers(0, 2**31),
+       st.sampled_from(SEMIRING_NAMES))
+@settings(max_examples=30, deadline=None)
+def test_spadd_all_semirings_match_dense(m, n, seed, srname):
+    rng = np.random.default_rng(seed)
+    da = _pos_int_sparse(rng, m, n)
+    db = _pos_int_sparse(rng, m, n)
+    c = spadd(from_dense(da), from_dense(db), by_name(srname))
+    np.testing.assert_array_equal(c.to_dense(),
+                                  _dense_add_oracle(da, db, srname))
+
+
+@given(st.integers(1, 20), st.integers(1, 20), st.integers(1, 20),
+       st.integers(1, 4), st.integers(0, 2**31),
+       st.sampled_from(SEMIRING_NAMES))
+@settings(max_examples=24, deadline=None)
+def test_outer_1d_all_semirings(m, k, n, nparts, seed, srname):
+    """Algorithm 3 is semiring-generic: partial products merge with the
+    additive monoid, so it must equal the one-shot local oracle —
+    including empty k-slices when nparts > k."""
+    sr = by_name(srname)
+    rng = np.random.default_rng(seed)
+    da = _pos_int_sparse(rng, m, k)
+    db = _pos_int_sparse(rng, k, n)
+    a, b = from_dense(da), from_dense(db)
+    res = spgemm_outer_1d(a, b, nparts, semiring=sr)
+    np.testing.assert_array_equal(res.concat().to_dense(),
+                                  spgemm(a, b, sr).to_dense())
 
 
 def test_structure_matches_numeric(gen_matrices):
