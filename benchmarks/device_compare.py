@@ -1,0 +1,162 @@
+"""Device engine comparison — sparsity-aware 1D ring vs 2D SUMMA vs Split-3D.
+
+The paper's headline experiment (figs. 7/9): the 1D algorithm against the
+sparsity-oblivious 2D/3D baselines. All three now run on the same
+shard_map + Pallas BSR substrate with the same stats surface
+(``device_common.REQUIRED_STATS``), so this benchmark emits directly
+comparable rows per algorithm:
+
+  * measured wall time of the compiled device call (jit warmed once,
+    repeated executions timed — not re-tracing),
+  * planned vs padded communication bytes and message counts,
+  * dense MXU flops and planner wall time,
+  * ``match_oracle``: 1.0 iff the decoded C is bitwise-identical to the
+    ``spgemm_1d`` host oracle (integer-valued inputs make that exact).
+    ``tools/bench_smoke.sh`` gates on these rows — scores, not timings.
+
+Geometry adapts to the visible device count: under ``benchmarks.run`` the
+parent process sees one device (smoke-test contract) and every mesh
+degrades to a single device (the full shard_map + scheduled-kernel path,
+zero planned comm); ``tools/bench_smoke.sh`` relaunches with 8 fake host
+devices so the ring/grid/layer collectives actually move payloads.
+
+``python -m benchmarks.device_compare --json [PATH]`` merges this module's
+rows into an existing ``BENCH_paper_figs.json`` (replacing its previous
+``device_compare`` rows, keeping every other bench's trajectory).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.core.sparse import CSC, banded_clustered, erdos_renyi
+from repro.core.spgemm_1d import spgemm_1d
+from repro.core.spgemm_1d_device import (build_device_plan, compile_ring,
+                                         decode_ring_output)
+from repro.core.spgemm_2d_device import (build_summa_plan, compile_summa,
+                                         decode_summa_output)
+from repro.core.spgemm_3d_device import build_summa3d_plan
+
+from .common import Csv, timer
+
+DEFAULT_JSON = "BENCH_paper_figs.json"
+
+
+def geometry():
+    """(ndev, nparts, grid, layers) feasible on the visible devices."""
+    import jax
+    ndev = jax.device_count()
+    nparts = 4 if ndev >= 4 else 1
+    grid = 2 if ndev >= 4 else 1
+    layers = 2 if ndev >= 8 else 1
+    return ndev, nparts, grid, layers
+
+
+def intify(a: CSC) -> CSC:
+    """Round values to nonzero integers: every partial sum is exact in f32,
+    so decoded device results must match the host oracle bitwise."""
+    a.data[:] = np.rint(2 * a.data)
+    a.data[a.data == 0] = 1.0
+    return a
+
+
+def measure_engines(a: CSC, b: CSC, nparts: int, grid: int, layers: int,
+                    bs: int, engine: str = "pallas",
+                    check_oracle: bool = True, repeats: int = 3):
+    """Run A·B through all three device engines; yield (algo, row-dict).
+
+    Each compiled callable is warmed once and timed over ``repeats``
+    executions of the same jitted fn. ``match_oracle`` compares the decoded
+    CSC bitwise against the plus-times host oracle (callers pass
+    integer-valued operands, see :func:`intify`).
+    """
+    import jax
+
+    oracle = None
+    if check_oracle:
+        oracle = spgemm_1d(a, b, nparts).concat().prune(0.0)
+
+    plans = (
+        ("1d", build_device_plan(a, b, nparts=nparts, bs=bs),
+         compile_ring, decode_ring_output),
+        ("2d", build_summa_plan(a, b, grid=grid, bs=bs),
+         compile_summa, decode_summa_output),
+        ("3d", build_summa3d_plan(a, b, grid=grid, layers=layers, bs=bs),
+         compile_summa, decode_summa_output),
+    )
+    for name, plan, compile_fn, decode_fn in plans:
+        fn, args = compile_fn(plan, engine=engine)
+        out = jax.block_until_ready(fn(*args))      # warm the jit cache
+        t = timer(lambda: jax.block_until_ready(fn(*args)), repeats=repeats)
+        s = plan.stats
+        row = dict(
+            wall_s=t,
+            comm_planned_MB=s["comm_bytes_planned"] / 2**20,
+            comm_padded_MB=s["comm_bytes_padded"] / 2**20,
+            messages=s["messages"],
+            dense_gflop=s["dense_flops"] / 1e9,
+            plan_s=s["plan_seconds"],
+        )
+        if check_oracle:
+            c = decode_fn(plan, np.asarray(out))
+            row["match_oracle"] = float(
+                np.array_equal(c.indptr, oracle.indptr)
+                and np.array_equal(c.indices, oracle.indices)
+                and np.array_equal(c.data, oracle.data.astype(np.float32)))
+        yield name, row
+
+
+def main(scale: int = 1) -> Csv:
+    csv = Csv("device_compare")
+    ndev, nparts, grid, layers = geometry()
+    geo = f"P={nparts} grid={grid} layers={layers} on {ndev} device(s)"
+    csv.add("geometry/devices", ndev, geo)
+
+    n = 512 * scale
+    for dname, a in (
+        ("hv15r-like", banded_clustered(n, max(n // 40, 8), 6.0, seed=11)),
+        ("eukarya-like", erdos_renyi(n, n, 5.0, seed=12)),
+    ):
+        a = intify(a)
+        for name, row in measure_engines(a, a, nparts, grid, layers, bs=32):
+            for key, val in row.items():
+                csv.add(f"{dname}/{name}/{key}", val,
+                        geo if key == "wall_s" else "")
+    return csv
+
+
+def merge_json(csv: Csv, path: str, scale: int) -> None:
+    """Replace this bench's rows inside an existing trajectory file.
+
+    The file's top-level ``scale`` describes the ``benchmarks.run`` sweep
+    that created it and is left untouched; this bench's own scale is
+    recorded under ``bench_scales`` so merged rows stay attributable."""
+    data = dict(scale=scale, failures=0, rows=[])
+    if os.path.exists(path):
+        with open(path) as fh:
+            data = json.load(fh)
+    data.setdefault("bench_scales", {})[csv.bench] = scale
+    keep = [r for r in data.get("rows", []) if r.get("bench") != csv.bench]
+    data["rows"] = keep + csv.entries
+    with open(path, "w") as fh:
+        json.dump(data, fh, indent=1)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
+                    metavar="PATH",
+                    help="merge rows into PATH (replacing previous "
+                         f"device_compare rows; default {DEFAULT_JSON})")
+    args = ap.parse_args()
+    out_csv = main(scale=args.scale)
+    out_csv.emit()
+    if args.json is not None:
+        merge_json(out_csv, args.json, args.scale)
+        print(f"# merged {len(out_csv.entries)} device_compare rows "
+              f"into {args.json}")

@@ -22,8 +22,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.sparse import erdos_renyi
-from repro.core.spgemm_1d_device import (_blockize_parts, _snap_to_tiles,
-                                         build_device_plan, compile_ring,
+from repro.core.device_common import blockize_parts, snap_to_tiles
+from repro.core.spgemm_1d_device import (build_device_plan, compile_ring,
                                          payload_need_maps)
 from repro.core.plan import Partition1D
 
@@ -57,10 +57,10 @@ def _planner_microbench(csv: Csv, scale: int) -> None:
     nparts, bs, nblocks = 8, 64, 8
     n = 4096 * scale
     a = erdos_renyi(n, n, 24.0, seed=7)          # ~1e5 nnz at scale 1
-    part_k = _snap_to_tiles(Partition1D.balanced(a.ncols, nparts), bs)
+    part_k = snap_to_tiles(Partition1D.balanced(a.ncols, nparts), bs)
     part_n = Partition1D.balanced(a.ncols, nparts)
-    a_parts = _blockize_parts(a, part_k, bs, np.float32)
-    b_parts = _blockize_parts(a, part_n, bs, np.float32)
+    a_parts = blockize_parts(a, part_k, bs, np.float32, fill=0.0)
+    b_parts = blockize_parts(a, part_n, bs, np.float32, fill=0.0)
     kg = -(-a.ncols // bs)
     hit = np.zeros((nparts, kg), dtype=bool)
     for i, bp in enumerate(b_parts):

@@ -4,7 +4,15 @@ The MPI analogue: given C "cores", vary P (processes) with t = C/P threads.
 More processes ⇒ more parallel compute but more (and smaller) fetches;
 fewer ⇒ sequential-copy overhead. Modeled time = per-process comm (α-β) +
 measured local SpGEMM time scaled by threads (ideal within-process
-scaling, as the paper's OpenMP regions approximately achieve)."""
+scaling, as the paper's OpenMP regions approximately achieve).
+
+``--engine device`` (or ``main(engine="device")``) replaces the α-β model
+rows with *measured* wall times of the compiled device ring (shard_map
+fetch + scheduled Pallas kernel), sweeping the process counts that fit on
+the visible devices — under ``benchmarks.run`` that is the single-device
+ring (P=1, zero planned comm); relaunch with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a real P sweep.
+"""
 
 from __future__ import annotations
 
@@ -12,10 +20,42 @@ import numpy as np
 
 from repro.core import spgemm_1d
 
-from .common import MODEL, Csv, datasets
+from .common import MODEL, Csv, datasets, timer
 
 
-def main(scale: int = 1) -> Csv:
+def _device_main(scale: int) -> Csv:
+    import jax
+
+    from repro.core.sparse import banded_clustered
+    from repro.core.spgemm_1d_device import build_device_plan, compile_ring
+
+    csv = Csv("fig07_device")
+    # reduced-size analogue: the sweep compiles one ring per P value
+    n = 1024 * scale
+    a = banded_clustered(n, max(n // 80, 8), 8.0, seed=1)
+    ndev = jax.device_count()
+    for nparts in (1, 2, 4, 8):
+        if nparts > ndev:
+            continue
+        plan = build_device_plan(a, a, nparts=nparts, bs=64)
+        fn, args = compile_ring(plan)
+        jax.block_until_ready(fn(*args))             # warm the jit cache
+        t = timer(lambda: jax.block_until_ready(fn(*args)), repeats=3)
+        csv.add(f"P={nparts}/measured_wall_ms", t * 1e3,
+                "compiled device ring")
+        csv.add(f"P={nparts}/comm_planned_MB",
+                plan.stats["comm_bytes_planned"] / 2**20)
+        csv.add(f"P={nparts}/comm_padded_MB",
+                plan.stats["comm_bytes_padded"] / 2**20)
+        csv.add(f"P={nparts}/plan_s", plan.stats["plan_seconds"])
+    return csv
+
+
+def main(scale: int = 1, engine: str = "host") -> Csv:
+    if engine == "device":
+        return _device_main(scale)
+    if engine != "host":
+        raise ValueError(f"engine must be 'host' or 'device', got {engine!r}")
     csv = Csv("fig07")
     a = datasets(scale)["hv15r-like"]
     cores = 64
@@ -33,4 +73,9 @@ def main(scale: int = 1) -> Csv:
 
 
 if __name__ == "__main__":
-    main().emit()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--engine", choices=("host", "device"), default="host")
+    args = ap.parse_args()
+    main(scale=args.scale, engine=args.engine).emit()

@@ -1,6 +1,14 @@
 """Fig. 9 — strong scaling of squaring: sparsity-aware 1D vs 2D SUMMA vs
 Split-3D, on all four dataset analogues; modeled total time with/without
-the random-permutation preprocessing the 2D/3D algorithms need."""
+the random-permutation preprocessing the 2D/3D algorithms need.
+
+``--engine device`` (or ``main(engine="device")``) swaps the α-β model for
+*measured* wall times of the three device engines (1D ring / 2D SUMMA /
+Split-3D on the shared shard_map + Pallas substrate, via
+``device_compare.measure_engines``), at the mesh geometry the visible
+device count allows — single-device meshes under ``benchmarks.run``, a
+real 4/2×2/2×2×2 sweep under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``."""
 
 from __future__ import annotations
 
@@ -12,7 +20,35 @@ from repro.core import (spgemm_1d, summa2d_comm_volume,
 from .common import MODEL, Csv, datasets, strategies, timer
 
 
-def main(scale: int = 1) -> Csv:
+def _device_main(scale: int) -> Csv:
+    from repro.core.sparse import banded_clustered, erdos_renyi
+
+    from .device_compare import geometry, intify, measure_engines
+
+    csv = Csv("fig09_device")
+    ndev, nparts, grid, layers = geometry()
+    geo = f"P={nparts} grid={grid} layers={layers} on {ndev} device(s)"
+    n = 768 * scale
+    for dname, a in (
+        ("hv15r-like", banded_clustered(n, max(n // 60, 8), 8.0, seed=1)),
+        ("eukarya-like", erdos_renyi(n, n, 6.0, seed=2)),
+    ):
+        a = intify(a)
+        for name, row in measure_engines(a, a, nparts, grid, layers, bs=32,
+                                         check_oracle=False):
+            csv.add(f"{dname}/{name}/measured_wall_ms",
+                    row["wall_s"] * 1e3, geo)
+            csv.add(f"{dname}/{name}/comm_planned_MB",
+                    row["comm_planned_MB"])
+            csv.add(f"{dname}/{name}/comm_padded_MB", row["comm_padded_MB"])
+    return csv
+
+
+def main(scale: int = 1, engine: str = "host") -> Csv:
+    if engine == "device":
+        return _device_main(scale)
+    if engine != "host":
+        raise ValueError(f"engine must be 'host' or 'device', got {engine!r}")
     csv = Csv("fig09")
     data = datasets(scale)
     for dname, a in data.items():
@@ -55,4 +91,9 @@ def main(scale: int = 1) -> Csv:
 
 
 if __name__ == "__main__":
-    main().emit()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--engine", choices=("host", "device"), default="host")
+    args = ap.parse_args()
+    main(scale=args.scale, engine=args.engine).emit()

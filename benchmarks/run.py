@@ -17,7 +17,7 @@ import sys
 import time
 import traceback
 
-from . import (cv_mema, device_ring, fig04_permutation,
+from . import (cv_mema, device_compare, device_ring, fig04_permutation,
                fig05_comm_volume, fig06_block_fetch, fig07_config_sweep,
                fig08_breakdown, fig09_strong_scaling, fig10_rta,
                fig12_outer_product, fig13_bc, moe_dispatch)
@@ -26,7 +26,7 @@ MODULES = [
     fig04_permutation, fig05_comm_volume, fig06_block_fetch,
     fig07_config_sweep, fig08_breakdown, fig09_strong_scaling,
     fig10_rta, fig12_outer_product, fig13_bc, cv_mema, moe_dispatch,
-    device_ring,
+    device_ring, device_compare,
 ]
 
 DEFAULT_JSON = "BENCH_paper_figs.json"

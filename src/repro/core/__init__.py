@@ -12,7 +12,10 @@ Layers:
   spgemm_3d.py     Split-3D-SpGEMM baseline
   partition.py     random permutation + METIS-style multilevel partitioner
   blocksparse.py   MXU-aligned block-sparse tiles (device payloads)
+  device_common.py shared device-engine machinery (blockize/pack/decode/stats)
   spgemm_1d_device.py  shard_map ring execution of the fetch plan (TPU path)
+  spgemm_2d_device.py  device sparse SUMMA baseline (all_gather grid mesh)
+  spgemm_3d_device.py  device Split-3D baseline (layered SUMMA + k-reduce)
 """
 
 from .semiring import BOOL_OR_AND, MIN_PLUS, PLUS_TIMES, Semiring, by_name
@@ -28,6 +31,9 @@ from .spgemm_1d import SpGEMM1DResult, spgemm_1d, spgemm_1d_simple
 from .spgemm_outer import OuterProductResult, spgemm_outer_1d
 from .spgemm_2d import SpGEMM2DResult, spgemm_2d
 from .spgemm_3d import SpGEMM3DResult, spgemm_3d
+from .spgemm_2d_device import (SummaDevicePlan, build_summa_plan,
+                               run_device_summa)
+from .spgemm_3d_device import build_summa3d_plan, run_device_summa3d
 from .partition import (PartitionReport, degree_squared_weights, edge_cut,
                         multilevel_partition, partition_to_permutation,
                         random_permutation)

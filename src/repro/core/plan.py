@@ -258,17 +258,29 @@ def _block_nnz(mat: CSC, row_splits: np.ndarray,
     return out
 
 
-def summa2d_comm_volume(a: CSC, b: CSC, grid: int) -> dict:
+def summa2d_comm_volume(a: CSC, b: CSC, grid: int,
+                        row_splits: Optional[np.ndarray] = None,
+                        colk_splits: Optional[np.ndarray] = None,
+                        coln_splits: Optional[np.ndarray] = None) -> dict:
     """Exact comm volume of 2D sparse SUMMA on a grid×grid process mesh.
 
     Every A block is broadcast along its process row (grid-1 receivers);
     every B block along its process column. This is sparsity-*oblivious*:
     volume depends only on block nnz, not on whether the data is used.
+
+    The optional splits override the default balanced block cuts (A rows /
+    contraction dim / B cols, each ``(grid+1,)`` monotone) so the model can
+    be evaluated on exactly the partition another plan used — e.g. the
+    tile-snapped partitions of ``spgemm_2d_device.build_summa_plan``, whose
+    ``comm_bytes_model`` stat must agree with this function.
     """
-    rs_a = np.linspace(0, a.nrows, grid + 1).astype(np.int64)
-    cs_a = np.linspace(0, a.ncols, grid + 1).astype(np.int64)
-    rs_b = np.linspace(0, b.nrows, grid + 1).astype(np.int64)
-    cs_b = np.linspace(0, b.ncols, grid + 1).astype(np.int64)
+    rs_a = (np.linspace(0, a.nrows, grid + 1).astype(np.int64)
+            if row_splits is None else np.asarray(row_splits, np.int64))
+    cs_a = (np.linspace(0, a.ncols, grid + 1).astype(np.int64)
+            if colk_splits is None else np.asarray(colk_splits, np.int64))
+    rs_b = cs_a  # B's rows live on the contraction partition
+    cs_b = (np.linspace(0, b.ncols, grid + 1).astype(np.int64)
+            if coln_splits is None else np.asarray(coln_splits, np.int64))
     a_blocks = _block_nnz(a, rs_a, cs_a)
     b_blocks = _block_nnz(b, rs_b, cs_b)
     vol_a = int(a_blocks.sum()) * (grid - 1) * BYTES_PER_NNZ

@@ -55,6 +55,10 @@ class Semiring:
     #   (vals [nprod, ...], segment_ids, num_segments) -> [num_segments, ...]
     # empty segments come back as the reduce identity of the underlying op
     jnp_segment_reduce: Callable = None
+    # collective reduce of the additive monoid over a named mesh axis:
+    #   (vals, axis_name) -> vals  — the Split-3D cross-layer merge
+    # (psum / pmax / pmin: every registered monoid has a native collective)
+    jnp_axis_reduce: Callable = None
 
     def prune_mask(self, vals: np.ndarray, tol: float = 0.0) -> np.ndarray:
         """Entries considered nonzero by this semiring: |v - 0̄| > tol for
@@ -88,6 +92,7 @@ def _make_plus_times() -> Semiring:
             a, b, preferred_element_type=jnp.float32),
         jnp_segment_reduce=lambda v, seg, n: jax.ops.segment_sum(
             v, seg, num_segments=n),
+        jnp_axis_reduce=lambda v, axis: jax.lax.psum(v, axis),
     )
 
 
@@ -113,6 +118,7 @@ def _make_bool_or_and() -> Semiring:
         jnp_tile_combine=lambda acc, a, b: jnp.maximum(acc, _bool_matmul(a, b)),
         jnp_segment_reduce=lambda v, seg, n: jax.ops.segment_max(
             v, seg, num_segments=n),
+        jnp_axis_reduce=lambda v, axis: jax.lax.pmax(v, axis),
     )
 
 
@@ -146,6 +152,7 @@ def _make_min_plus() -> Semiring:
         jnp_tile_combine=_mp_tile_combine,
         jnp_segment_reduce=lambda v, seg, n: jax.ops.segment_min(
             v, seg, num_segments=n),
+        jnp_axis_reduce=lambda v, axis: jax.lax.pmin(v, axis),
     )
 
 

@@ -63,18 +63,17 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import cpu_device_mesh, shard_map
-from ..kernels.bsr_spgemm.kernel import bsr_spgemm_pallas
-from ..kernels.bsr_spgemm.ref import bsr_spgemm_ref
-from .blocksparse import (BlockSparse, build_schedule, flags_from_c_slot,
-                          from_csc)
+from .blocksparse import BlockSparse, build_schedule
+from .device_common import (ENGINES, blockize_parts, check_plan_semiring,
+                            decode_tiles, pack_schedules, resolve_engine,
+                            run_schedule, snap_to_tiles)
 from .plan import BYTES_PER_NNZ, Partition1D
 from .semiring import PLUS_TIMES, Semiring
-from .sparse import CSC, from_coo, hstack_partitions
+from .sparse import CSC
 
 __all__ = ["DeviceSpGEMMPlan", "build_device_plan", "compile_ring",
-           "run_device_spgemm", "payload_need_maps", "ENGINES"]
-
-ENGINES = ("pallas", "jnp")
+           "run_device_spgemm", "decode_ring_output", "payload_need_maps",
+           "ENGINES"]
 
 
 # ---------------------------------------------------------------------------
@@ -113,26 +112,6 @@ class DeviceSpGEMMPlan:
     exact_bytes: int           # planned payload bytes (sum of real tiles moved)
     padded_bytes: int          # what the static-shape ring actually moves
     stats: dict
-
-
-def _snap_to_tiles(part: Partition1D, bs: int) -> Partition1D:
-    """Round interior split points to multiples of ``bs`` (monotone).
-
-    Interior points are capped at ``ncols`` *before* the monotone sweep —
-    rounding up past the end (bs > part width at the tail) must yield empty
-    trailing parts, not grow the partition beyond the matrix.
-    """
-    splits = part.splits.copy()
-    splits[1:-1] = np.minimum((splits[1:-1] + bs // 2) // bs * bs,
-                              splits[-1])
-    return Partition1D(np.maximum.accumulate(splits))
-
-
-def _blockize_parts(mat: CSC, part: Partition1D, bs: int,
-                    dtype, fill: float = 0.0) -> List[BlockSparse]:
-    return [from_csc(mat.col_slice(*part.part_slice(i)), bs=bs, dtype=dtype,
-                     fill=fill)
-            for i in range(part.nparts)]
 
 
 def payload_need_maps(a_parts: List[BlockSparse],
@@ -206,16 +185,16 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
         part_n = Partition1D.balanced(b.ncols, Pn)
     # the k partition must land on tile boundaries, otherwise the parts'
     # local tile grids don't embed into the global k tile space
-    part_k = _snap_to_tiles(part_k, bs)
+    part_k = snap_to_tiles(part_k, bs)
 
     if a_blockize_cache is None:
-        a_parts = _blockize_parts(a, part_k, bs, dtype, fill=semiring.zero)
+        a_parts = blockize_parts(a, part_k, bs, dtype, fill=semiring.zero)
     else:
         key = (id(a), tuple(int(s) for s in part_k.splits), bs,
                np.dtype(dtype).str, float(semiring.zero))
         cached = a_blockize_cache.get(key)
         if cached is None or cached[0] is not a:
-            cached = (a, _blockize_parts(a, part_k, bs, dtype,
+            cached = (a, blockize_parts(a, part_k, bs, dtype,
                                          fill=semiring.zero))
             # bounded FIFO: callers alternate between a handful of static
             # operands (BC: Aᵀ forward / A backward); evicting beyond that
@@ -224,7 +203,7 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
                 a_blockize_cache.pop(next(iter(a_blockize_cache)))
             a_blockize_cache[key] = cached
         a_parts = cached[1]
-    b_parts = _blockize_parts(b, part_n, bs, dtype, fill=semiring.zero)
+    b_parts = blockize_parts(b, part_n, bs, dtype, fill=semiring.zero)
 
     # tile-level hit vectors: device i needs global tile-row g of B_i ⇔ some
     # nonzero of B_i falls in element rows [g*bs, (g+1)*bs)
@@ -243,6 +222,7 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
     send_per_step: List[List[np.ndarray]] = []   # [step][device j] slots
     recv_per_dev: List[List[np.ndarray]] = [[] for _ in range(Pn)]
     exact_tiles = 0
+    planned_msgs = 0
     for s in range(1, Pn):
         sends = []
         for j in range(Pn):
@@ -250,6 +230,7 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
             slots = np.nonzero(need_all[j][dst])[0].astype(np.int32)
             sends.append(slots)
             exact_tiles += len(slots)
+            planned_msgs += int(len(slots) > 0)
         step_sizes.append(max((len(sl) for sl in sends), default=0))
         send_per_step.append(sends)
         for i in range(Pn):
@@ -279,10 +260,7 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
     # (step_sizes[0]) ++ ... ++ recv step P-1. Build a BlockSparse "virtual"
     # A-view per device with *global* tile cols and stack-slot payload ids.
     max_na = max(na_max, 1)
-    sched_a, sched_b, sched_c = [], [], []
-    crows_l, ccols_l, c_counts = [], [], []
-    nprod_max = 0
-    nc_max = 0
+    scheds = []
     for i in range(Pn):
         rows_l, cols_l, slots_l = [], [], []
         ap = a_parts[i]
@@ -322,54 +300,43 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
             shape=(kg * bs, bp.shape[1]),
             orig_shape=(a.ncols, bp.orig_shape[1]), bs=bs)
         sched = build_schedule(virt, bview)
-        sched_a.append(vslots[sched.a_slot].astype(np.int32))
-        sched_b.append(sched.b_slot)
-        sched_c.append(sched.c_slot)
-        crows_l.append(sched.c_rows)
-        ccols_l.append(sched.c_cols)
-        c_counts.append(sched.nc)
-        nprod_max = max(nprod_max, sched.nprod)
-        nc_max = max(nc_max, sched.nc)
+        scheds.append(dict(a_slot=vslots[sched.a_slot].astype(np.int32),
+                           b_slot=sched.b_slot, c_slot=sched.c_slot,
+                           c_rows=sched.c_rows, c_cols=sched.c_cols))
 
-    nprod_max = max(nprod_max, 1)
-    nc_max = max(nc_max, 1)
     # pad products target the garbage output slot nc_max with payload slot 0:
     # the engines compute them unmasked and the trailing slot is dropped.
-    A = np.zeros((Pn, nprod_max), dtype=np.int32)
-    B = np.zeros((Pn, nprod_max), dtype=np.int32)
-    C = np.full((Pn, nprod_max), nc_max, dtype=np.int32)
-    c_rows = np.zeros((Pn, nc_max), dtype=np.int32)
-    c_cols = np.zeros((Pn, nc_max), dtype=np.int32)
-    for i in range(Pn):
-        n = len(sched_a[i])
-        A[i, :n] = sched_a[i]
-        B[i, :n] = sched_b[i]
-        C[i, :n] = sched_c[i]
-        c_rows[i, :c_counts[i]] = crows_l[i]
-        c_cols[i, :c_counts[i]] = ccols_l[i]
-    flags = flags_from_c_slot(C)
+    packed = pack_schedules(scheds)
+    nprod_max, nc_max = packed["nprod_max"], packed["nc_max"]
 
     tile_bytes = bs * bs * np.dtype(dtype).itemsize
     padded_tiles = Pn * S_total
-    nprod_total = int(sum(len(s) for s in sched_a))
+    nprod_total = int(sum(len(s["a_slot"]) for s in scheds))
     plan_seconds = time.perf_counter() - t_plan0
     return DeviceSpGEMMPlan(
         nparts=Pn, bs=bs,
         a_tiles=a_tiles, b_tiles=b_tiles, send_slots=send_slots,
-        a_slot=A, b_slot=B, c_slot=C, flags=flags,
+        a_slot=packed["a_slot"], b_slot=packed["b_slot"],
+        c_slot=packed["c_slot"], flags=packed["flags"],
         step_sizes=tuple(step_sizes), nc_max=nc_max,
-        c_rows=c_rows, c_cols=c_cols, c_counts=np.array(c_counts),
+        c_rows=packed["c_rows"], c_cols=packed["c_cols"],
+        c_counts=packed["c_counts"],
         part_n=part_n, out_shape=(a.nrows, b.ncols),
         semiring=semiring,
         exact_bytes=exact_tiles * tile_bytes,
         padded_bytes=padded_tiles * tile_bytes,
         stats=dict(
+            # shared device-engine stats surface (device_common.REQUIRED_STATS)
+            comm_bytes_planned=exact_tiles * tile_bytes,
+            comm_bytes_padded=padded_tiles * tile_bytes,
+            messages=int(planned_msgs),
+            dense_flops=2 * nprod_total * bs ** 3,
+            plan_seconds=plan_seconds,
+            # 1D-specific detail
             na_max=na_max, nb_max=nb_max, nprod_max=int(nprod_max),
             nprod_total=nprod_total,
-            dense_flops=2 * nprod_total * bs ** 3,
             nc_max=int(nc_max), ring_steps=Pn - 1,
             exact_tiles=int(exact_tiles), padded_tiles=int(padded_tiles),
-            plan_seconds=plan_seconds,
         ),
     )
 
@@ -377,19 +344,6 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
 # ---------------------------------------------------------------------------
 # device execution
 # ---------------------------------------------------------------------------
-
-def resolve_engine(engine: str) -> str:
-    """``"auto"`` resolves to the Pallas scheduled kernel — the product
-    path on every backend (interpret mode covers CPU, cf.
-    ``launch.resolve_interpret``); ``"jnp"`` selects the segment-sum
-    reference formulation."""
-    if engine == "auto":
-        return "pallas"
-    if engine not in ENGINES:
-        raise ValueError(f"engine must be one of {ENGINES + ('auto',)}, "
-                         f"got {engine!r}")
-    return engine
-
 
 def _make_step_fn(plan: DeviceSpGEMMPlan, axis: str, engine: str,
                   interpret: Optional[bool]):
@@ -432,33 +386,12 @@ def _make_step_fn(plan: DeviceSpGEMMPlan, axis: str, engine: str,
         # ---- compute phase: scheduled kernel over the combined stack -------
         # both engines write pad products into the trailing garbage slot
         # (nc_max), dropped here; neither needs a validity mask.
-        if engine == "pallas":
-            out = bsr_spgemm_pallas(
-                stack, b_tiles, a_slot, b_slot, c_slot, flags,
-                nprod=nprod_max, nc=nc_max + 1, bs=bs, interpret=interpret,
-                semiring=semiring)
-        else:
-            out = bsr_spgemm_ref(
-                stack, b_tiles, a_slot, b_slot, c_slot, nc=nc_max + 1,
-                semiring=semiring)
+        out = run_schedule(stack, b_tiles, a_slot, b_slot, c_slot, flags,
+                           engine=engine, nprod_max=nprod_max, nc_max=nc_max,
+                           bs=bs, interpret=interpret, semiring=semiring)
         return out[:nc_max][None]  # drop garbage slot, restore P axis slot
 
     return body
-
-
-def _resolve_semiring(plan: DeviceSpGEMMPlan,
-                      semiring: Optional[Semiring]) -> Semiring:
-    """The plan's payloads are identity-filled at build time, so the
-    semiring is baked in; an explicit argument is accepted for call-site
-    clarity but must match the plan."""
-    if semiring is None:
-        return plan.semiring
-    if semiring.name != plan.semiring.name:
-        raise ValueError(
-            f"plan was built for semiring {plan.semiring.name!r} "
-            f"(payload pads are its identity); cannot execute under "
-            f"{semiring.name!r} — rebuild the plan with semiring=")
-    return semiring
 
 
 def compile_ring(plan: DeviceSpGEMMPlan,
@@ -475,7 +408,7 @@ def compile_ring(plan: DeviceSpGEMMPlan,
     callable (a fresh closure per call would re-trace every time).
     """
     engine = resolve_engine(engine)
-    _resolve_semiring(plan, semiring)
+    check_plan_semiring(plan.semiring, semiring)
     if mesh is None:
         mesh = cpu_device_mesh(plan.nparts, axis)
 
@@ -494,6 +427,20 @@ def compile_ring(plan: DeviceSpGEMMPlan,
     return fn, args
 
 
+def decode_ring_output(plan: DeviceSpGEMMPlan, out: np.ndarray) -> CSC:
+    """Decode the raw ``(P, nc_max, bs, bs)`` ring output to a global CSC.
+
+    The shared semiring-aware decode (``device_common.decode_tiles``): each
+    device's output-tile columns are local to its ``part_n`` slice, so the
+    part's element offset is added and columns are clipped at the part's
+    upper boundary before the single global COO assembly.
+    """
+    splits = plan.part_n.splits.astype(np.int64)
+    return decode_tiles(out, plan.c_rows, plan.c_cols, plan.c_counts,
+                        plan.semiring, plan.out_shape,
+                        col_off=splits[:-1], col_lim=splits[1:])
+
+
 def run_device_spgemm(plan: DeviceSpGEMMPlan,
                       mesh: Optional[Mesh] = None,
                       axis: str = "p",
@@ -501,36 +448,6 @@ def run_device_spgemm(plan: DeviceSpGEMMPlan,
                       interpret: Optional[bool] = None,
                       semiring: Optional[Semiring] = None) -> CSC:
     """Execute the plan across the devices of ``mesh`` and decode C."""
-    Pn = plan.nparts
-    sr = _resolve_semiring(plan, semiring)
+    check_plan_semiring(plan.semiring, semiring)
     fn, args = compile_ring(plan, mesh, axis, engine, interpret)
-    out = np.asarray(fn(*args))  # (P, nc_max, bs, bs)
-
-    # ---- decode to a global CSC --------------------------------------------
-    # One batched prune-mask scan over every device's output stack. Tiles
-    # past each device's real count are reset to the additive identity
-    # first: the Pallas engine never writes them (revisit-free flush touches
-    # exactly the scheduled slots), so their payloads are unspecified. The
-    # prune is the semiring's — an entry is dropped iff it equals the
-    # identity (0.0 for plus-times/bool, +inf for min-plus), never by a
-    # literal nonzero test.
-    bs = plan.bs
-    widths = plan.part_n.widths()
-    valid_tile = np.arange(plan.nc_max)[None, :] < plan.c_counts[:, None]
-    out = np.where(valid_tile[:, :, None, None], out,
-                   out.dtype.type(sr.zero))
-    ii, tt, rr, cc = np.nonzero(sr.prune_mask(out))
-    vals = out[ii, tt, rr, cc]
-    rows_g = rr + plan.c_rows[ii, tt].astype(np.int64) * bs
-    cols_g = cc + plan.c_cols[ii, tt].astype(np.int64) * bs
-    keep = (rows_g < plan.out_shape[0]) & (cols_g < widths[ii])
-    ii, rows_g, cols_g, vals = ii[keep], rows_g[keep], cols_g[keep], vals[keep]
-    bounds = np.searchsorted(ii, np.arange(Pn + 1))
-    parts = [
-        from_coo(rows_g[bounds[i]:bounds[i + 1]],
-                 cols_g[bounds[i]:bounds[i + 1]],
-                 vals[bounds[i]:bounds[i + 1]],
-                 (plan.out_shape[0], int(widths[i])))
-        for i in range(Pn)
-    ]
-    return hstack_partitions(parts)
+    return decode_ring_output(plan, np.asarray(fn(*args)))

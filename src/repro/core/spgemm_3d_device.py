@@ -1,0 +1,64 @@
+"""Device execution of Split-3D-SpGEMM [Azad et al. '16] — layered SUMMA.
+
+The second sparsity-*oblivious* baseline the paper compares against. The
+MPI original distributes processes on a ``grid x grid x layers`` mesh: the
+contraction (k) dimension is split across the ``layers`` axis, every layer
+runs a 2D sparse SUMMA on its k-slice of A and B, and the layers' partial C
+results are merged with an all-to-all + reduction across the layer axis.
+
+The TPU translation reuses the device SUMMA machinery wholesale
+(``spgemm_2d_device.build_summa_plan(..., layers=L)``); what this module
+adds is the 3D reading of its two extra moving parts:
+
+  * **k-split**: the contraction partition has ``grid * layers`` tile-
+    aligned pieces; piece ``l*grid + s`` is stage ``s`` *of layer* ``l``.
+    Each layer's gathers (``all_gather`` over the row/column axes — the
+    static-shape stand-in for the per-stage ``MPI_Bcast``, exactly as the
+    ring uses ``ppermute`` for ``MPI_Get``) stay layer-local because the
+    collective axes are orthogonal to the layer axis.
+
+  * **cross-layer merge**: the MPI version's split + reduce of partial C
+    matrices becomes ONE semiring all-reduce over the layer mesh axis
+    (``Semiring.jnp_axis_reduce`` — psum for plus-times, pmax for bool
+    or-and, pmin for min-plus; every registered additive monoid has a
+    native XLA collective). To make that reduce elementwise the layers'
+    schedules all target the *union* of their output tiles, and slots a
+    layer never writes are reset to the additive identity first — the
+    semiring-generic analogue of summing sparse partials, with no literal
+    ``0.0`` anywhere (ROADMAP semiring contract).
+
+Like its host counterpart (``spgemm_3d.py``), the layer count is a tuning
+knob: ``benchmarks/device_compare.py`` sweeps it the way the paper selects
+the best layer count per input.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .semiring import PLUS_TIMES, Semiring
+from .sparse import CSC
+from .spgemm_2d_device import (SummaDevicePlan, build_summa_plan,
+                               compile_summa, decode_summa_output,
+                               run_device_summa)
+
+__all__ = ["build_summa3d_plan", "compile_summa3d", "run_device_summa3d",
+           "decode_summa3d_output"]
+
+
+def build_summa3d_plan(a: CSC, b: CSC, grid: int, layers: int,
+                       bs: int = 128, dtype=np.float32,
+                       semiring: Semiring = PLUS_TIMES) -> SummaDevicePlan:
+    """Plan a Split-3D SpGEMM on a (grid, grid, layers) device mesh."""
+    assert layers >= 1
+    return build_summa_plan(a, b, grid, layers=layers, bs=bs, dtype=dtype,
+                            semiring=semiring)
+
+
+# execution and decode are identical to the generalized SUMMA path — the
+# layer reduce activates whenever plan.layers > 1
+compile_summa3d = compile_summa
+run_device_summa3d = run_device_summa
+decode_summa3d_output = decode_summa_output

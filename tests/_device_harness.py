@@ -1,0 +1,28 @@
+"""Shared 8-fake-device subprocess harness for the device-engine tests.
+
+shard_map collectives need multiple devices, but the parent test process
+must keep seeing ONE device (smoke-test contract, see conftest.py), and
+jax locks the device count at first backend init — so every multi-device
+check runs a script in a fresh subprocess with its own ``XLA_FLAGS``.
+``test_device_ring.py`` and ``test_device_engines.py`` both run through
+this helper so the flag/PYTHONPATH setup cannot diverge between suites.
+"""
+
+import os
+import subprocess
+import sys
+
+N_DEVICES = 8
+
+
+def run_subprocess(script: str, timeout: int = 300):
+    """Run ``script`` under ``python -c`` with N_DEVICES fake host devices
+    and src/ + tests/ on PYTHONPATH (so ``repro.*`` and ``_propcheck``
+    import)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={N_DEVICES}"
+    here = os.path.dirname(__file__)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "..", "src"), here])
+    return subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)

@@ -131,10 +131,29 @@ def csr_with_dense(**kwargs) -> Strategy:
     return Strategy(draw, "csr_with_dense")
 
 
+def int_matmul_pair(max_dim: int = 40, density: float = 0.25) -> Strategy:
+    """(CSC a, CSC b, dense a, dense b): integer-valued operands with a
+    shared contraction dim. Every partial sum (and min/max) is exactly
+    representable in f32, so SpGEMM results must agree BITWISE across
+    engines, summation orders and host/device under every semiring — the
+    substrate of the device differential grids (test_device_ring,
+    test_device_engines)."""
+    def draw(rng):
+        from repro.core import from_dense
+        m = int(rng.integers(1, max_dim + 1))
+        k = int(rng.integers(1, max_dim + 1))
+        n = int(rng.integers(1, max_dim + 1))
+        da = np.rint(2 * dense_sparse_array(m, m, k, k, density).example(rng))
+        db = np.rint(2 * dense_sparse_array(k, k, n, n, density).example(rng))
+        return from_dense(da), from_dense(db), da, db
+    return Strategy(draw, "int_matmul_pair")
+
+
 strategies = types.SimpleNamespace(
     integers=integers, sampled_from=sampled_from, composite=composite,
     dense_sparse_array=dense_sparse_array,
     csc_with_dense=csc_with_dense, csr_with_dense=csr_with_dense,
+    int_matmul_pair=int_matmul_pair,
 )
 
 

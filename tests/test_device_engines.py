@@ -1,0 +1,173 @@
+"""Cross-algorithm differential grid over the device SpGEMM engines.
+
+The paper's headline claim compares the sparsity-aware 1D algorithm against
+2D sparse SUMMA and Split-3D-SpGEMM. All three now run on the same
+shard_map + Pallas BSR substrate, so this module pins:
+
+  * the **differential property grid** (8-device subprocess, like
+    test_device_ring): for random integer-valued CSC pairs over
+    (nparts/grid/layers, bs, semiring) the 1D ring (both engines), the
+    device 2D SUMMA (both engines), the device Split-3D, and the
+    ``spgemm_1d`` host oracle all decode to bitwise-identical CSCs —
+    including empty parts, empty layers and non-tile-multiple dims
+    (integer values make every partial sum/min/max exact in f32, so
+    bitwise equality is well-defined across summation orders);
+
+  * the **shared stats surface** (in-process; plans are host-side):
+    every device plan carries ``device_common.REQUIRED_STATS``, planned
+    comm never exceeds padded comm, a one-device mesh plans zero
+    communication, and the 2D device plan's element-level comm model
+    agrees with ``plan.summa2d_comm_volume`` evaluated on the same
+    (tile-snapped) partitions.
+"""
+
+import textwrap
+
+import numpy as np
+import pytest
+from _device_harness import run_subprocess
+
+GRID_SCRIPT = textwrap.dedent("""
+    import numpy as np
+    from _propcheck import strategies as st
+    from repro.core import by_name
+    from repro.core.spgemm_1d import spgemm_1d
+    from repro.core.spgemm_1d_device import build_device_plan, run_device_spgemm
+    from repro.core.spgemm_2d_device import build_summa_plan, run_device_summa
+    from repro.core.spgemm_3d_device import (build_summa3d_plan,
+                                             run_device_summa3d)
+
+    CONFIGS = [  # (nparts, grid, layers, bs) — small dims leave parts,
+                 # blocks and whole layers empty; dims are never tile
+                 # multiples
+        (2, 2, 2, 8),
+        (4, 2, 2, 8),
+        (8, 2, 2, 16),
+    ]
+    SEMIRINGS = ["plus_times", "bool_or_and", "min_plus"]
+    # integer-valued operands: bitwise agreement is well-defined across
+    # engines and summation orders (see _propcheck.int_matmul_pair)
+    strat = st.int_matmul_pair()
+    case = 0
+    for ci, (nparts, grid, layers, bs) in enumerate(CONFIGS):
+        rng = np.random.default_rng(ci)
+        a, b, _, _ = strat.example(rng)
+        for srname in SEMIRINGS:
+            sr = by_name(srname)
+            # the host Algorithm-1 oracle (the plus-times oracle drops its
+            # explicit cancellation zeros; the other semirings prune by
+            # their own identity inside spgemm already)
+            orc = spgemm_1d(a, b, nparts, semiring=sr).concat()
+            if srname == "plus_times":
+                orc = orc.prune(0.0)
+
+            plan1 = build_device_plan(a, b, nparts=nparts, bs=bs,
+                                      semiring=sr)
+            plan2 = build_summa_plan(a, b, grid=grid, bs=bs, semiring=sr)
+            plan3 = build_summa3d_plan(a, b, grid=grid, layers=layers,
+                                       bs=bs, semiring=sr)
+            for plan in (plan1, plan2, plan3):
+                s = plan.stats
+                assert s["comm_bytes_planned"] <= s["comm_bytes_padded"]
+
+            results = {
+                "1d/pallas": run_device_spgemm(plan1, engine="pallas"),
+                "1d/jnp": run_device_spgemm(plan1, engine="jnp"),
+                "2d/pallas": run_device_summa(plan2, engine="pallas"),
+                "2d/jnp": run_device_summa(plan2, engine="jnp"),
+                "3d/pallas": run_device_summa3d(plan3, engine="pallas"),
+                "3d/jnp": run_device_summa3d(plan3, engine="jnp"),
+            }
+            for name, c in results.items():
+                ctx = (ci, srname, name)
+                assert np.array_equal(c.indptr, orc.indptr), ctx
+                assert np.array_equal(c.indices, orc.indices), ctx
+                assert np.array_equal(c.data,
+                                      orc.data.astype(np.float32)), ctx
+                case += 1
+    print("CASES", case)
+    print("ALLOK")
+""")
+
+
+def test_cross_algorithm_grid_on_8_devices():
+    """1D ring / device SUMMA / device Split-3D / jnp reference vs host
+    oracle, bitwise, for all three registered semirings."""
+    out = run_subprocess(GRID_SCRIPT, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "ALLOK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# stats surface + accounting invariants (plan construction is host-side;
+# no multi-device subprocess needed)
+# ---------------------------------------------------------------------------
+
+def _all_plans(a, b):
+    from repro.core.spgemm_1d_device import build_device_plan
+    from repro.core.spgemm_2d_device import build_summa_plan
+    from repro.core.spgemm_3d_device import build_summa3d_plan
+    return {
+        "1d": build_device_plan(a, b, nparts=4, bs=32),
+        "2d": build_summa_plan(a, b, grid=2, bs=32),
+        "3d": build_summa3d_plan(a, b, grid=2, layers=2, bs=32),
+    }
+
+
+def test_stats_surface_shared_across_engines(gen_matrices):
+    """Every device engine reports the same stats keys with sane values."""
+    from repro.core.device_common import REQUIRED_STATS
+    a = gen_matrices["er"]
+    for name, plan in _all_plans(a, a).items():
+        for key in REQUIRED_STATS:
+            assert key in plan.stats, (name, key)
+        s = plan.stats
+        assert s["comm_bytes_planned"] <= s["comm_bytes_padded"], name
+        assert s["comm_bytes_planned"] >= 0 and s["messages"] >= 0, name
+        assert s["dense_flops"] > 0 and s["plan_seconds"] >= 0, name
+        # dataclass mirrors stay consistent with the shared surface
+        assert plan.exact_bytes == s["comm_bytes_planned"], name
+        assert plan.padded_bytes == s["comm_bytes_padded"], name
+
+
+def test_one_device_mesh_plans_zero_comm(gen_matrices):
+    """A 1-device mesh moves nothing: planned bytes and messages are 0."""
+    from repro.core.spgemm_1d_device import build_device_plan
+    from repro.core.spgemm_2d_device import build_summa_plan
+    from repro.core.spgemm_3d_device import build_summa3d_plan
+    a = gen_matrices["banded"]
+    for plan in (build_device_plan(a, a, nparts=1, bs=32),
+                 build_summa_plan(a, a, grid=1, bs=32),
+                 build_summa3d_plan(a, a, grid=1, layers=1, bs=32)):
+        assert plan.stats["comm_bytes_planned"] == 0
+        assert plan.stats["messages"] == 0
+
+
+def test_summa_device_model_matches_host_model(gen_matrices):
+    """The 2D device plan's element-level comm model (counted from the
+    blockized tile payloads) agrees with ``summa2d_comm_volume`` (counted
+    by COO binning) on the same tile-snapped partitions — total and
+    per-process."""
+    from repro.core.plan import summa2d_comm_volume
+    from repro.core.spgemm_2d_device import build_summa_plan
+    a = gen_matrices["er"]
+    for grid, bs in ((2, 32), (4, 16)):
+        plan = build_summa_plan(a, a, grid=grid, bs=bs)
+        vol = summa2d_comm_volume(a, a, grid,
+                                  row_splits=plan.part_m.splits,
+                                  colk_splits=plan.part_k.splits,
+                                  coln_splits=plan.part_n.splits)
+        assert plan.stats["comm_bytes_model"] == vol["total_bytes"]
+        np.testing.assert_array_equal(
+            plan.stats["comm_bytes_model_per_device"],
+            vol["per_process_bytes"])
+
+
+def test_summa_plan_rejects_mismatched_semiring(gen_matrices):
+    """The semiring handshake guards the SUMMA engines like the ring."""
+    from repro.core import MIN_PLUS
+    from repro.core.spgemm_2d_device import build_summa_plan, compile_summa
+    a = gen_matrices["banded"]
+    plan = build_summa_plan(a, a, grid=1, bs=32)
+    with pytest.raises(ValueError, match="rebuild the plan"):
+        compile_summa(plan, semiring=MIN_PLUS)

@@ -2,16 +2,15 @@
 
 The shard_map ring needs multiple devices; the parent test process must
 keep seeing ONE device (smoke-test contract), so the multi-device check
-runs in a subprocess with its own XLA_FLAGS.
+runs in a subprocess with its own XLA_FLAGS (shared harness:
+``_device_harness.run_subprocess``).
 """
 
-import os
-import subprocess
-import sys
 import textwrap
 
 import numpy as np
 import pytest
+from _device_harness import run_subprocess
 
 SCRIPT = textwrap.dedent("""
     import numpy as np
@@ -38,22 +37,8 @@ GRID_SCRIPT = textwrap.dedent("""
     import numpy as np
     from _propcheck import strategies as st
     from repro.core import by_name
-    from repro.core.sparse import from_dense
     from repro.core.spgemm_1d import spgemm_1d
     from repro.core.spgemm_1d_device import build_device_plan, run_device_spgemm
-
-    @st.composite
-    def int_matmul_pair(draw):
-        # integer-valued operands with a shared contraction dim: every
-        # partial sum (and min/max) is exactly representable in f32, so the
-        # decoded CSC must agree BITWISE across engines and with the host
-        # oracle under every semiring.
-        m = draw(st.integers(1, 40))
-        k = draw(st.integers(1, 40))
-        n = draw(st.integers(1, 40))
-        da = np.rint(2 * draw(st.dense_sparse_array(m, m, k, k, 0.25)))
-        db = np.rint(2 * draw(st.dense_sparse_array(k, k, n, n, 0.25)))
-        return from_dense(da), from_dense(db), da, db
 
     CONFIGS = [  # (nparts, bs, nblocks) — small dims make parts empty
         (2, 8, None),
@@ -62,7 +47,10 @@ GRID_SCRIPT = textwrap.dedent("""
         (8, 8, 4),
     ]
     SEMIRINGS = ["plus_times", "bool_or_and", "min_plus"]
-    strat = int_matmul_pair()
+    # integer-valued operands: every partial sum/min/max is exact in f32,
+    # so decoded CSCs must agree BITWISE with the host oracle
+    # (see _propcheck.int_matmul_pair)
+    strat = st.int_matmul_pair()
     case = 0
     for ci, (nparts, bs, nblocks) in enumerate(CONFIGS):
         for rep in range(2):
@@ -97,18 +85,8 @@ GRID_SCRIPT = textwrap.dedent("""
 """)
 
 
-def _run_subprocess(script, timeout=300):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    here = os.path.dirname(__file__)
-    env["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(here, "..", "src"), here])
-    return subprocess.run([sys.executable, "-c", script], env=env,
-                          capture_output=True, text=True, timeout=timeout)
-
-
 def test_ring_on_8_devices():
-    out = _run_subprocess(SCRIPT)
+    out = run_subprocess(SCRIPT)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "ALLOK" in out.stdout
 
@@ -116,7 +94,7 @@ def test_ring_on_8_devices():
 def test_engine_oracle_grid_on_8_devices():
     """Device-vs-oracle equivalence over (nparts, bs, nblocks, engine,
     semiring), including empty parts and dims not multiples of bs."""
-    out = _run_subprocess(GRID_SCRIPT, timeout=600)
+    out = run_subprocess(GRID_SCRIPT, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "ALLOK" in out.stdout
 

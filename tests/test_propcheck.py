@@ -5,6 +5,8 @@ contract — deterministic draws, real falsification, both decorator orders,
 correct matrix strategies — is pinned here.
 """
 
+import re
+
 import numpy as np
 import pytest
 from _propcheck import given, settings, strategies as st
@@ -116,3 +118,119 @@ def test_dense_strategy_density_and_shape(arr):
     # density is a target, not a guarantee — but all-nonzero would mean the
     # mask was dropped
     assert np.count_nonzero(arr) <= arr.size
+
+
+@given(st.int_matmul_pair(max_dim=12))
+@settings(max_examples=15, deadline=None)
+def test_int_matmul_pair_strategy(quad):
+    a, b, da, db = quad
+    assert a.ncols == b.nrows                      # multipliable pair
+    np.testing.assert_allclose(a.to_dense(), da)
+    np.testing.assert_allclose(b.to_dense(), db)
+    # integer-valued: partial sums are exact in f32 (the bitwise-equality
+    # premise of the device differential grids)
+    assert np.array_equal(da, np.rint(da)) and np.array_equal(db, np.rint(db))
+
+
+# ---------------------------------------------------------------------------
+# degenerate matrix-strategy outputs: the sparse substrate must survive
+# 0×n / n×0 shapes and all-empty columns, and the strategies must be able
+# to produce them (min_rows/min_cols are honoured down to 0)
+# ---------------------------------------------------------------------------
+
+@given(st.csc_with_dense(min_rows=0, max_rows=0, min_cols=0, max_cols=8,
+                         density=0.5))
+@settings(max_examples=15, deadline=None)
+def test_csc_strategy_zero_rows(pair):
+    mat, dense = pair
+    assert mat.shape[0] == 0 and mat.nnz == 0
+    assert mat.shape == dense.shape                    # 0×n, incl. 0×0
+    np.testing.assert_allclose(mat.to_dense(), dense)
+    assert mat.transpose().shape == (mat.ncols, 0)     # n×0 round trip
+
+
+@given(st.csc_with_dense(min_rows=1, max_rows=8, min_cols=0, max_cols=0,
+                         density=0.5))
+@settings(max_examples=15, deadline=None)
+def test_csc_strategy_zero_cols(pair):
+    mat, dense = pair
+    assert mat.shape[1] == 0 and mat.nnz == 0 and mat.nzc == 0
+    assert len(mat.indptr) == 1                        # n×0: empty indptr
+    np.testing.assert_allclose(mat.to_dense(), dense)
+
+
+@given(st.csr_with_dense(min_rows=0, max_rows=0, min_cols=1, max_cols=8,
+                         density=0.5))
+@settings(max_examples=15, deadline=None)
+def test_csr_strategy_degenerate_transpose(pair):
+    mat, dense = pair                                  # n×0 via the CSR view
+    assert mat.shape[1] == 0 and mat.nnz == 0
+    np.testing.assert_allclose(mat.to_dense(), dense)
+
+
+@given(st.csc_with_dense(min_rows=1, max_rows=10, min_cols=1, max_cols=10,
+                         density=0.0))
+@settings(max_examples=15, deadline=None)
+def test_csc_strategy_all_empty_columns(pair):
+    mat, dense = pair
+    assert mat.nnz == 0 and mat.nzc == 0               # every column empty
+    assert np.count_nonzero(dense) == 0
+    assert len(mat.nzc_ids) == 0
+    np.testing.assert_allclose(mat.to_dense(), dense)
+
+
+# ---------------------------------------------------------------------------
+# the failure report is a *reproduction recipe*: re-seeding the generator
+# with the printed (seed, case) pair must re-draw the exact counterexample
+# ---------------------------------------------------------------------------
+
+def test_failure_seed_line_reproduces_counterexample():
+    strat = st.integers(0, 10**6)
+    drawn = []
+
+    @given(strat)
+    @settings(max_examples=50, deadline=None)
+    def prop(n):
+        drawn.append(n)
+        assert n % 2 == 0                              # falsified by any odd
+
+    with pytest.raises(AssertionError) as excinfo:
+        prop()
+    msg = str(excinfo.value)
+    m = re.search(r"falsified on case (\d+)/\d+ \(seed (\d+)\)", msg)
+    assert m, f"no reproduction line in: {msg}"
+    case, seed = int(m.group(1)), int(m.group(2))
+    # replay exactly what the harness did for that case: fresh generator
+    # seeded by (test seed, case index), strategies drawn in order
+    rng = np.random.default_rng((seed, case))
+    replayed = strat.example(rng)
+    assert replayed == drawn[-1]                       # same counterexample
+    assert replayed % 2 == 1                           # ...and it still fails
+
+
+def test_failure_seed_line_reproduces_matrix_counterexample():
+    """Same recipe through the composite matrix strategies: the re-drawn
+    CSC is structurally identical to the one that falsified."""
+    strat = st.csc_with_dense(max_rows=10, max_cols=10, density=0.4)
+    drawn = []
+
+    @given(strat)
+    @settings(max_examples=25, deadline=None)
+    def prop(pair):
+        mat, dense = pair
+        drawn.append((mat, dense))
+        assert mat.nnz < 3                             # falsified eventually
+
+    with pytest.raises(AssertionError) as excinfo:
+        prop()
+    m = re.search(r"falsified on case (\d+)/\d+ \(seed (\d+)\)",
+                  str(excinfo.value))
+    assert m
+    rng = np.random.default_rng((int(m.group(2)), int(m.group(1))))
+    mat2, dense2 = strat.example(rng)
+    mat1, dense1 = drawn[-1]
+    np.testing.assert_array_equal(dense2, dense1)
+    np.testing.assert_array_equal(mat2.indptr, mat1.indptr)
+    np.testing.assert_array_equal(mat2.indices, mat1.indices)
+    np.testing.assert_array_equal(mat2.data, mat1.data)
+    assert mat2.nnz >= 3

@@ -35,6 +35,39 @@ print(f"bench smoke OK: planner speedup {speedup:.1f}x, "
       f"engines recorded: {', '.join(engines)}")
 PY
 
+# Device-engine comparison smoke: run the 1D ring, device 2D SUMMA and
+# device Split-3D on an 8-fake-device mesh at toy scale. Correctness gates
+# CI (match_oracle rows — scores, not timings); the rows are merged into
+# BENCH_paper_figs.json next to the device_ring trajectory.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m benchmarks.device_compare --json BENCH_paper_figs.json
+
+python - <<'PY'
+import json
+
+rows = [r for r in json.load(open("BENCH_paper_figs.json"))["rows"]
+        if r["bench"] == "device_compare"]
+assert rows, "device_compare emitted no rows"
+
+matches = {r["name"]: float(r["value"]) for r in rows
+           if r["name"].endswith("/match_oracle")}
+for algo in ("1d", "2d", "3d"):
+    assert any(f"/{algo}/" in n for n in matches), \
+        f"no {algo} oracle-match row recorded: {sorted(matches)}"
+bad = [n for n, v in matches.items() if v != 1.0]
+assert not bad, f"device engines diverged from the host oracle: {bad}"
+
+for r in rows:
+    if r["name"].endswith("/comm_planned_MB"):
+        padded = next(float(x["value"]) for x in rows
+                      if x["name"] == r["name"].replace("planned", "padded"))
+        assert float(r["value"]) <= padded + 1e-9, \
+            f"planned comm exceeds padded at {r['name']}"
+
+print(f"device-compare smoke OK: {len(matches)} oracle matches across "
+      f"1d/2d/3d, {len(rows)} rows merged")
+PY
+
 # Device-BC smoke: betweenness centrality end-to-end on the device ring
 # (the fig13 --engine device adapter), scores checked against the local
 # oracle so the adapter and the semiring-generic engine path can't rot.
