@@ -1,0 +1,187 @@
+"""Session amortization — cached steady-state multiply vs plan-every-call.
+
+The paper's workloads are iterated multiplies; this benchmark measures
+what ``core.session.SpGEMMSession`` buys them. For each device algorithm
+(1D ring / 2D SUMMA / Split-3D, geometry adapted to the visible devices):
+
+  * ``rebuild_per_call_s`` — one multiply the way a session-less caller
+    does it: fresh ``build_*_plan`` + fresh ``compile_*`` closure (which
+    re-traces) + execute + decode, every call;
+  * ``cached_steady_s`` — the session's structure-keyed steady state:
+    the same multiply served from the plan/executable cache (identical
+    values, so even the payload repack is skipped);
+  * ``cached_repack_s`` — steady state when the operand *values* change
+    every call (the values-only repack path: blockize + device_put, still
+    zero planning / zero retrace);
+  * ``speedup_x`` — rebuild / cached-steady;
+    ``tools/bench_smoke.sh`` fails below the 5× floor;
+  * ``match_oracle`` — 1.0 iff the cached decode is bitwise-identical to
+    a cold-plan run (integer operands make that exact).
+
+An apps section runs the four session workloads end-to-end — BC, AMG
+Galerkin, MCL, randomized sketch — through one shared session and scores
+them against host oracles (``*/match_oracle`` rows, gated by the smoke
+script), recording each workload's hit counts.
+
+``python -m benchmarks.session_amortization --json [PATH]`` merges rows
+into an existing ``BENCH_paper_figs.json`` (replacing previous
+``session_amortization`` rows), exactly like ``device_compare``.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import SpGEMMSession, block_diagonal_noise
+from repro.core.sparse import CSC, banded_clustered
+from repro.core.spgemm_1d import spgemm_1d
+
+from .common import Csv, timer
+from .device_compare import DEFAULT_JSON, geometry, intify, merge_json
+
+REPEATS = 3
+
+
+def _fresh_call(algo: str, a: CSC, b: CSC, nparts: int, grid: int,
+                layers: int, bs: int):
+    """One multiply with no session: plan + compile + run + decode."""
+    if algo == "1d":
+        from repro.core.spgemm_1d_device import (build_device_plan,
+                                                 compile_ring,
+                                                 decode_ring_output)
+        plan = build_device_plan(a, b, nparts=nparts, bs=bs)
+        fn, args = compile_ring(plan)
+        return decode_ring_output(plan, np.asarray(fn(*args)))
+    from repro.core.spgemm_2d_device import (build_summa_plan, compile_summa,
+                                             decode_summa_output)
+    plan = build_summa_plan(a, b, grid=grid,
+                            layers=layers if algo == "3d" else 1, bs=bs)
+    fn, args = compile_summa(plan)
+    return decode_summa_output(plan, np.asarray(fn(*args)))
+
+
+def _bitwise(c: CSC, ref: CSC) -> float:
+    return float(np.array_equal(c.indptr, ref.indptr)
+                 and np.array_equal(c.indices, ref.indices)
+                 and np.array_equal(c.data, ref.data))
+
+
+def main(scale: int = 1) -> Csv:
+    csv = Csv("session_amortization")
+    ndev, nparts, grid, layers = geometry()
+    geo = f"P={nparts} grid={grid} layers={layers} on {ndev} device(s)"
+    csv.add("geometry/devices", ndev, geo)
+
+    n = 512 * scale
+    a = intify(banded_clustered(n, max(n // 40, 8), 6.0, seed=21))
+    # a values-jittered twin with the same structure (repack workload)
+    a_jit = a.astype(np.float64)
+    a_jit.data[:] = a.data + 1.0
+    a_jit.data[a_jit.data == 0] = 3.0
+
+    bs = 32
+    for algo, kw in (("1d", dict(nparts=nparts)),
+                     ("2d", dict(grid=grid)),
+                     ("3d", dict(grid=grid, layers=layers))):
+        session = SpGEMMSession()
+        # warm: the one cold plan+compile the steady state amortizes
+        session.matmul(a, a, algorithm=algo, bs=bs, **kw)
+
+        t_rebuild = timer(
+            lambda: _fresh_call(algo, a, a, nparts, grid, layers, bs),
+            repeats=REPEATS)
+        t_cached = timer(
+            lambda: session.matmul(a, a, algorithm=algo, bs=bs, **kw),
+            repeats=REPEATS)
+        mats = [a, a_jit]
+        # the cached entry currently holds a's values, so start on a_jit:
+        # every timed call then flips values and pays the repack
+        state = {"i": 1}
+
+        def _repack_call():
+            m = mats[state["i"] % 2]     # values flip every call
+            state["i"] += 1
+            session.matmul(m, m, algorithm=algo, bs=bs, **kw)
+
+        t_repack = timer(_repack_call, repeats=REPEATS)
+
+        ref = _fresh_call(algo, a, a, nparts, grid, layers, bs)
+        c_steady = session.matmul(a, a, algorithm=algo, bs=bs, **kw)
+        csv.add(f"{algo}/rebuild_per_call_s", t_rebuild, geo)
+        csv.add(f"{algo}/cached_steady_s", t_cached)
+        csv.add(f"{algo}/cached_repack_s", t_repack)
+        csv.add(f"{algo}/speedup_x", t_rebuild / max(t_cached, 1e-12),
+                "plan+retrace amortized by the session cache")
+        csv.add(f"{algo}/match_oracle", _bitwise(c_steady, ref),
+                "cached decode vs cold-plan run, bitwise")
+        csv.add(f"{algo}/plan_cache_hits", session.stats["plan_cache_hits"])
+        csv.add(f"{algo}/plan_seconds_saved",
+                session.stats["plan_seconds_saved"])
+        assert session.stats["traces"] == session.stats[
+            "plan_cache_misses"], "steady state must not retrace"
+
+    # ---- the four abstract workloads through one shared session ------------
+    from repro.apps import (bc_batch, count_sketch, device_spgemm_fn,
+                            galerkin_product, mcl, sketch_apply)
+
+    session = SpGEMMSession()
+    g = block_diagonal_noise(max(n // 2, 128), 8, d_in=4.0, d_out=0.15,
+                             seed=22)
+    g.data[:] = 1.0
+    src = np.arange(8)
+    res_bc = bc_batch(g, src, spgemm_fn=device_spgemm_fn(
+        nparts=1, bs=bs, session=session))
+    res_bc_ref = bc_batch(g, src)
+    csv.add("apps/bc/match_oracle",
+            float(np.allclose(res_bc.scores, res_bc_ref.scores,
+                              rtol=1e-4, atol=1e-5)))
+
+    gal = galerkin_product(g, nparts=1, backend="device", bs=bs,
+                           session=session)
+    gal_ref = galerkin_product(g, nparts=1, backend="host")
+    csv.add("apps/amg/match_oracle",
+            float(np.allclose(gal.coarse.to_dense(),
+                              gal_ref.coarse.to_dense(),
+                              rtol=1e-4, atol=1e-4)))
+
+    from repro.apps.mcl import mcl_dense_reference
+
+    gm = block_diagonal_noise(max(n // 4, 64), 4, d_in=5.0, d_out=0.1,
+                              seed=23)
+    gm.data[:] = np.abs(gm.data) + 0.1
+    res_mcl = mcl(gm, session=session, bs=bs)
+    dm, _ = mcl_dense_reference(gm.to_dense())
+    csv.add("apps/mcl/match_oracle",
+            float(np.allclose(res_mcl.matrix.to_dense(), dm,
+                              rtol=1e-4, atol=1e-6)))
+
+    sk_in = intify(banded_clustered(max(n // 2, 128), 8, 4.0, seed=24))
+    sk = count_sketch(32, sk_in.nrows, seed=25)
+    res_sk = sketch_apply(sk_in, sk, session=session, bs=bs)
+    csv.add("apps/sketch/match_oracle",
+            _bitwise(res_sk.sketched,
+                     spgemm_1d(sk, sk_in, 1).concat().prune(0.0)
+                     .astype(np.float32)))
+    csv.add("apps/session_hits", session.stats["plan_cache_hits"],
+            "shared across BC+AMG+MCL+sketch")
+    csv.add("apps/session_plan_seconds_saved",
+            session.stats["plan_seconds_saved"])
+    return csv
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
+                    metavar="PATH",
+                    help="merge rows into PATH (replacing previous "
+                         f"session_amortization rows; default {DEFAULT_JSON})")
+    args = ap.parse_args()
+    out_csv = main(scale=args.scale)
+    out_csv.emit()
+    if args.json is not None:
+        merge_json(out_csv, args.json, args.scale)
+        print(f"# merged {len(out_csv.entries)} session_amortization rows "
+              f"into {args.json}")

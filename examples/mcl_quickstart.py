@@ -1,0 +1,49 @@
+"""Quickstart: Markov clustering on the persistent SpGEMM session.
+
+    PYTHONPATH=src python examples/mcl_quickstart.py
+
+Builds a community-structured graph, clusters it with MCL — every
+expansion (M·M) runs on the device SpGEMM path through a persistent
+``SpGEMMSession`` — and shows what the session amortized: once the
+iteration's sparsity pattern settles, expansions stop paying for host
+planning and retracing entirely.
+"""
+
+import numpy as np
+
+from repro.apps import mcl
+from repro.core import SpGEMMSession, block_diagonal_noise
+
+
+def main():
+    n, nblocks = 240, 6
+    g = block_diagonal_noise(n, nblocks, d_in=8.0, d_out=0.05, seed=7)
+    g.data[:] = np.abs(g.data) + 0.5
+    print(f"graph: {g.shape}, nnz={g.nnz}, {nblocks} planted communities")
+
+    session = SpGEMMSession()
+    res = mcl(g, inflation=1.5, prune_threshold=1e-3, session=session,
+              bs=32)
+
+    sizes = np.bincount(np.unique(res.clusters, return_inverse=True)[1])
+    print(f"MCL: {res.iterations} expansions, converged={res.converged}, "
+          f"{len(sizes)} clusters (sizes "
+          f"{sorted(sizes.tolist(), reverse=True)})")
+
+    s = session.stats
+    print(f"session: {s['plan_cache_misses']} plans built, "
+          f"{s['plan_cache_hits']} reused while the pattern settled, "
+          f"{s['plan_seconds_saved'] * 1e3:.1f} ms of planning skipped")
+
+    # re-cluster a later snapshot of the same graph: identical sparsity
+    # structure, so every expansion replays a cached plan + executable
+    hits_before = s["plan_cache_hits"]
+    mcl(g, inflation=1.5, prune_threshold=1e-3, session=session, bs=32)
+    print(f"re-clustering the same structure: "
+          f"{s['plan_cache_hits'] - hits_before} of "
+          f"{s['calls'] - res.iterations} expansions were cache hits — "
+          f"zero new plans, zero retraces ({s['traces']} traces total)")
+
+
+if __name__ == "__main__":
+    main()

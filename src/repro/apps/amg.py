@@ -37,20 +37,25 @@ class GalerkinResult:
 
 
 def _galerkin_device(a: CSC, r: CSC, nparts: int, bs: int,
-                     nblocks: Optional[int], engine: str) -> GalerkinResult:
-    from ..core.spgemm_1d_device import build_device_plan, run_device_spgemm
+                     nblocks: Optional[int], engine: str,
+                     session=None) -> GalerkinResult:
+    from ..core.session import SpGEMMSession
 
+    if session is None:
+        session = SpGEMMSession()
     rt = r.transpose()
-    plan_l = build_device_plan(rt, a, nparts, bs=bs, nblocks=nblocks)
-    rta = run_device_spgemm(plan_l, engine=engine)
-    plan_r = build_device_plan(rta, r, nparts, bs=bs, nblocks=nblocks)
-    coarse = run_device_spgemm(plan_r, engine=engine)
+    rta = session.matmul(rt, a, nparts=nparts, bs=bs, nblocks=nblocks,
+                         engine=engine)
+    left = dict(session.last_call)
+    coarse = session.matmul(rta, r, nparts=nparts, bs=bs, nblocks=nblocks,
+                            engine=engine)
+    right = dict(session.last_call)
     return GalerkinResult(
         coarse=coarse,
-        left_bytes=plan_l.exact_bytes,
-        right_bytes=plan_r.exact_bytes,
-        left_flops=plan_l.stats["dense_flops"],
-        right_flops=plan_r.stats["dense_flops"],
+        left_bytes=left["comm_bytes_planned"],
+        right_bytes=right["comm_bytes_planned"],
+        left_flops=left["dense_flops"],
+        right_flops=right["dense_flops"],
         right_algorithm=f"device-{engine}",
     )
 
@@ -60,14 +65,19 @@ def galerkin_product(a: CSC, r: Optional[CSC] = None, nparts: int = 8,
                      right_algorithm: str = "outer",
                      backend: str = "host",
                      bs: int = 32,
-                     engine: str = "auto") -> GalerkinResult:
+                     engine: str = "auto",
+                     session=None) -> GalerkinResult:
     """Compute RᵀAR with distributed 1D SpGEMMs.
 
     right_algorithm: 'outer' (Algorithm 3, the paper's choice) or '1d'.
-    backend: 'host' (numpy oracle path) or 'device' (Pallas/shard_map ring;
-    ``bs`` is the tile side, ``engine`` selects the ring's compute engine,
-    and flops/bytes are the dense-tile schedule's). ``nparts`` must not
-    exceed the visible device count on the device backend.
+    backend: 'host' (numpy oracle path) or 'device' (Pallas/shard_map ring
+    via a persistent :class:`~repro.core.session.SpGEMMSession`; ``bs`` is
+    the tile side, ``engine`` selects the ring's compute engine, and
+    flops/bytes are the dense-tile schedule's). Pass ``session`` to share
+    the plan/executable cache across repeated Galerkin setups — AMG
+    re-coarsens the same grid hierarchy, so repeated products are
+    structure-keyed cache hits. ``nparts`` must not exceed the visible
+    device count on the device backend.
     """
     if r is None:
         r = restriction_operator(a, coarsening=coarsening)
@@ -75,7 +85,8 @@ def galerkin_product(a: CSC, r: Optional[CSC] = None, nparts: int = 8,
     if backend == "device":
         # element-level nblocks doesn't map to tile-column groups; the ring
         # plans its own Algorithm-2 grouping when given one (None = exact)
-        return _galerkin_device(a, r, nparts, bs, None, engine)
+        return _galerkin_device(a, r, nparts, bs, None, engine,
+                                session=session)
     if backend != "host":
         raise ValueError(f"backend must be 'host' or 'device', got "
                          f"{backend!r}")

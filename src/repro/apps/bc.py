@@ -133,33 +133,37 @@ def bc_batch(a: CSC, sources: np.ndarray,
 def device_spgemm_fn(nparts: int = 1, bs: int = 16,
                      nblocks: Optional[int] = None,
                      engine: str = "auto",
-                     interpret: Optional[bool] = None) -> Callable:
+                     interpret: Optional[bool] = None,
+                     session=None) -> Callable:
     """A ``spgemm_fn`` for :func:`bc_batch` backed by the device SpGEMM ring.
 
     Every BC multiply (forward frontier expansion *and* backward sweep)
-    plans and executes on the Pallas/shard_map path of
-    ``core.spgemm_1d_device`` under whatever semiring ``bc_batch`` passes —
-    this is the paper's §IV.C scenario on the product engine. ``nparts``
-    must not exceed the visible device count (``nparts=1`` exercises the
-    full shard_map + scheduled-kernel path on a single device); comm bytes
-    are the plan's exact planned payload bytes (zero at nparts=1 — a
-    one-device ring has no fetch steps).
+    executes on the Pallas/shard_map path under whatever semiring
+    ``bc_batch`` passes — this is the paper's §IV.C scenario on the product
+    engine. ``nparts`` must not exceed the visible device count
+    (``nparts=1`` exercises the full shard_map + scheduled-kernel path on a
+    single device); comm bytes are the plan's exact planned payload bytes
+    (zero at nparts=1 — a one-device ring has no fetch steps).
 
-    Plans are frontier-dependent, so each multiply re-plans and re-traces
-    the ring; the loop-invariant A side (the adjacency operand reused at
-    every level) is blockized once and cached across calls.
+    Multiplies route through a persistent
+    :class:`~repro.core.session.SpGEMMSession` (pass one to share its plan
+    cache across batches; a private one is created otherwise, exposed as
+    ``fn.session``). Frontier structure changes every forward level, but
+    on a symmetric graph the backward sweep replays the forward levels'
+    structures with new values — those multiplies are structure-keyed
+    cache hits: no host planning, no retrace, a values-only payload
+    repack. Repeated batches over the same graph hit even more.
     """
-    from ..core.spgemm_1d_device import build_device_plan, run_device_spgemm
+    from ..core.session import session_or_new
 
-    blockize_cache: dict = {}
+    session = session_or_new(session, interpret)
 
     def fn(x: CSC, y: CSC, semiring: Semiring):
-        plan = build_device_plan(x, y, nparts, bs=bs, nblocks=nblocks,
-                                 semiring=semiring,
-                                 a_blockize_cache=blockize_cache)
-        c = run_device_spgemm(plan, engine=engine, interpret=interpret)
+        c = session.matmul(x, y, nparts=nparts, bs=bs, nblocks=nblocks,
+                           semiring=semiring, engine=engine)
         # downstream σ/δ accumulation is float64; the exact small-int
         # frontier counts survive the f32 payloads unchanged
-        return c.astype(np.float64), plan.exact_bytes
+        return c.astype(np.float64), session.last_call["comm_bytes_planned"]
 
+    fn.session = session
     return fn

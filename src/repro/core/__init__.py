@@ -16,6 +16,8 @@ Layers:
   spgemm_1d_device.py  shard_map ring execution of the fetch plan (TPU path)
   spgemm_2d_device.py  device sparse SUMMA baseline (all_gather grid mesh)
   spgemm_3d_device.py  device Split-3D baseline (layered SUMMA + k-reduce)
+  session.py       persistent SpGEMM sessions: structure-keyed LRU cache of
+                   plans + compiled executables across all three engines
 """
 
 from .semiring import BOOL_OR_AND, MIN_PLUS, PLUS_TIMES, Semiring, by_name
@@ -37,3 +39,4 @@ from .spgemm_3d_device import build_summa3d_plan, run_device_summa3d
 from .partition import (PartitionReport, degree_squared_weights, edge_cut,
                         multilevel_partition, partition_to_permutation,
                         random_permutation)
+from .session import SpGEMMSession, structure_fingerprint

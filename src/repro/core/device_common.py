@@ -44,7 +44,7 @@ from .semiring import Semiring
 from .sparse import CSC, from_coo
 
 __all__ = [
-    "ENGINES", "REQUIRED_STATS",
+    "ENGINES", "REQUIRED_STATS", "SESSION_STATS",
     "snap_to_tiles", "blockize_parts", "resolve_engine",
     "check_plan_semiring", "pack_schedules", "run_schedule",
     "device_grid_mesh", "decode_tiles",
@@ -62,6 +62,22 @@ ENGINES = ("pallas", "jnp")
 #   plan_seconds       : host planner wall time
 REQUIRED_STATS = ("comm_bytes_planned", "comm_bytes_padded", "messages",
                   "dense_flops", "plan_seconds")
+
+# the persistent-session stats surface (``core.session.SpGEMMSession.stats``
+# carries exactly these keys; tests/test_session.py pins the surface):
+#   calls             : multiplies served by the session
+#   plan_cache_hits   : structure-identical repeats that skipped planning
+#   plan_cache_misses : cold keys that planned + compiled
+#   plan_seconds_saved: sum of cached plans' plan_seconds over the hits
+#                       that reused them (host planning time not re-spent)
+#   payload_repacks   : hits whose operand *values* changed — payload
+#                       stacks refilled, plan/executable reused
+#   traces            : shard_map-body (re)traces observed via the
+#                       compile-count probe; constant across cache hits
+#   evictions         : LRU entries dropped at capacity
+SESSION_STATS = ("calls", "plan_cache_hits", "plan_cache_misses",
+                 "plan_seconds_saved", "payload_repacks", "traces",
+                 "evictions")
 
 
 def snap_to_tiles(part: Partition1D, bs: int) -> Partition1D:

@@ -1,0 +1,276 @@
+"""Persistent device-SpGEMM sessions — structure-keyed plan/executable cache.
+
+The paper's use cases are all *iterated* multiplies: BC expands a frontier
+level after level, AMG re-builds Galerkin products per setup, Markov
+clustering squares the same operator until convergence, and randomized
+sketching applies one sketch to a stream of matrices. On the device path
+the expensive work per multiply is **host planning** (symbolic phase,
+schedule join, static-shape packing) and **tracing/compiling** the
+shard_map ring — both of which depend only on the operands' *sparsity
+structure* and the call geometry, never on the numeric values.
+
+:class:`SpGEMMSession` exploits that split. Every multiply is served from
+an LRU cache keyed on
+
+    (algorithm, mesh geometry (nparts / grid×layers), bs, nblocks,
+     semiring, engine, payload dtype,
+     structure fingerprint of A, structure fingerprint of B)
+
+with three outcomes:
+
+  * **cold key** — plan (``build_device_plan`` / ``build_summa_plan``),
+    compile (``compile_ring`` / ``compile_summa``), cache plan +
+    executable + device-resident args;
+  * **hit, same values** — run the cached executable as-is: zero host
+    planning, zero retrace, zero payload transfer;
+  * **hit, new values** — the values-only path: re-blockize payloads on
+    the cached plan's partitions (``repack_ring_payloads`` /
+    ``repack_summa_payloads``), swap them into the cached device args, run
+    the same executable. Still zero planning and zero retrace.
+
+Any structure change, semiring change, engine change or geometry change is
+simply a different key — invalidation is by construction, not by mutation
+tracking. Retrace-freedom is *observable*: the engines' ``trace_probe``
+fires from the traced body only, so ``stats["traces"]`` counts real
+(re)compilations (the surface is ``device_common.SESSION_STATS``).
+
+Policy (ROADMAP): applications never call ``build_device_plan`` /
+``compile_ring`` directly — BC, AMG, MCL and sketching all multiply
+through a session, so every iterated workload amortizes planning for free.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import time
+from collections import OrderedDict
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from .device_common import SESSION_STATS, resolve_engine
+from .semiring import PLUS_TIMES, Semiring
+from .sparse import CSC
+
+__all__ = ["SpGEMMSession", "session_or_new", "structure_fingerprint",
+           "values_fingerprint", "ALGORITHMS"]
+
+ALGORITHMS = ("1d", "2d", "3d")
+
+
+def structure_fingerprint(mat: CSC) -> bytes:
+    """Digest of the sparsity *structure* only: shape + indptr + indices.
+
+    Two matrices with equal fingerprints blockize to identical tile
+    layouts, so they share plans, schedules and compiled executables;
+    values are deliberately excluded (they only affect payload contents).
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.asarray(mat.shape, dtype=np.int64).tobytes())
+    h.update(mat.indptr.tobytes())
+    h.update(mat.indices.tobytes())
+    return h.digest()
+
+
+def values_fingerprint(mat: CSC) -> bytes:
+    """Digest of the stored values (used to skip the payload repack when a
+    structure-identical repeat also carries bit-identical values)."""
+    h = hashlib.blake2b(digest_size=16)
+    h.update(mat.data.tobytes())
+    return h.digest()
+
+
+def session_or_new(session: Optional["SpGEMMSession"],
+                   interpret: Optional[bool]) -> "SpGEMMSession":
+    """App-facing helper: create a session honoring ``interpret``, or pass
+    an existing one through. A supplied session already fixed its Pallas
+    interpret policy at construction, so combining it with an explicit
+    ``interpret`` would be silently ignored — refuse instead."""
+    if session is None:
+        return SpGEMMSession(interpret=interpret)
+    if interpret is not None:
+        raise ValueError(
+            "interpret is fixed when the session is created; construct "
+            "SpGEMMSession(interpret=...) instead of passing interpret "
+            "alongside an existing session")
+    return session
+
+
+class _Entry:
+    """One cached (plan, executable, device args) triple."""
+
+    __slots__ = ("plan", "fn", "args", "decode", "repack", "val_fp")
+
+    def __init__(self, plan, fn, args: List, decode: Callable,
+                 repack: Callable, val_fp: Tuple[bytes, bytes]):
+        self.plan = plan
+        self.fn = fn
+        self.args = args
+        self.decode = decode
+        self.repack = repack
+        self.val_fp = val_fp
+
+
+class SpGEMMSession:
+    """Persistent SpGEMM session over the device engines (1D/2D/3D).
+
+    ``maxsize`` bounds the LRU entry count (each entry pins a plan, a
+    compiled executable and its device-resident payload stacks).
+    ``interpret`` forwards to the Pallas launcher (None = auto: interpret
+    off-TPU, compiled on TPU).
+
+    ``stats`` carries the cumulative ``device_common.SESSION_STATS``
+    surface; ``last_call`` describes the most recent multiply::
+
+        cache_hit      : served from the cache (no host planning)
+        repacked       : values-only payload refresh performed
+        plan_seconds   : host planning time spent by THIS call (0.0 on hit)
+        comm_bytes_planned / comm_bytes_padded / messages / dense_flops :
+                         the executed plan's stats surface
+        algorithm      : which engine served the call
+    """
+
+    def __init__(self, maxsize: int = 32,
+                 interpret: Optional[bool] = None):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self.interpret = interpret
+        self._cache: "OrderedDict[tuple, _Entry]" = OrderedDict()
+        # loop-invariant-operand blockize reuse inside the 1D planner (BC
+        # re-plans the same adjacency against a fresh frontier every level)
+        self._blockize_cache: dict = {}
+        self.stats = {k: 0 for k in SESSION_STATS}
+        self.stats["plan_seconds_saved"] = 0.0
+        self.last_call: dict = {}
+
+    # ---- internals --------------------------------------------------------
+
+    def _count_trace(self):
+        self.stats["traces"] += 1
+
+    def _build(self, a: CSC, b: CSC, algorithm: str, nparts: int, grid: int,
+               layers: int, bs: int, nblocks: Optional[int],
+               semiring: Semiring, engine: str, dtype) -> _Entry:
+        from .spgemm_1d_device import (build_device_plan, compile_ring,
+                                       decode_ring_output,
+                                       repack_ring_payloads)
+        from .spgemm_2d_device import (build_summa_plan, compile_summa,
+                                       decode_summa_output,
+                                       repack_summa_payloads)
+
+        if algorithm == "1d":
+            plan = build_device_plan(
+                a, b, nparts, bs=bs, nblocks=nblocks, dtype=dtype,
+                semiring=semiring, a_blockize_cache=self._blockize_cache)
+            fn, args = compile_ring(plan, engine=engine,
+                                    interpret=self.interpret,
+                                    trace_probe=self._count_trace)
+            decode, repack = decode_ring_output, repack_ring_payloads
+        else:
+            plan = build_summa_plan(
+                a, b, grid=grid, layers=layers if algorithm == "3d" else 1,
+                bs=bs, dtype=dtype, semiring=semiring)
+            fn, args = compile_summa(plan, engine=engine,
+                                     interpret=self.interpret,
+                                     trace_probe=self._count_trace)
+            decode, repack = decode_summa_output, repack_summa_payloads
+        return _Entry(plan, fn, list(args), decode, repack,
+                      (values_fingerprint(a), values_fingerprint(b)))
+
+    # ---- the one public multiply ------------------------------------------
+
+    def matmul(self, a: CSC, b: CSC, *,
+               algorithm: str = "1d",
+               nparts: int = 1,
+               grid: int = 1,
+               layers: int = 1,
+               bs: int = 32,
+               nblocks: Optional[int] = None,
+               semiring: Semiring = PLUS_TIMES,
+               engine: str = "auto",
+               dtype=np.float32) -> CSC:
+        """C = A ⊗ B on the device path, cached by structure.
+
+        ``algorithm`` selects the distributed engine: ``"1d"`` (the
+        sparsity-aware ring, geometry ``nparts``), ``"2d"`` (sparse SUMMA,
+        geometry ``grid``×``grid``) or ``"3d"`` (Split-3D, geometry
+        ``grid``×``grid``×``layers``). The geometry must fit the visible
+        device count, exactly as for the direct ``run_device_*`` calls.
+        """
+        if algorithm not in ALGORITHMS:
+            raise ValueError(
+                f"algorithm must be one of {ALGORITHMS}, got {algorithm!r}")
+        engine = resolve_engine(engine)
+        geom = (nparts,) if algorithm == "1d" else \
+            (grid, layers if algorithm == "3d" else 1)
+        # nblocks is the 1D ring's Algorithm-2 fetch-grouping knob; the
+        # SUMMA planners have no such parameter, so it must not split
+        # byte-identical 2d/3d plans into distinct entries
+        key = (algorithm, geom, bs,
+               nblocks if algorithm == "1d" else None,
+               semiring.name, engine, np.dtype(dtype).str,
+               structure_fingerprint(a), structure_fingerprint(b))
+
+        self.stats["calls"] += 1
+        entry = self._cache.get(key)
+        hit = entry is not None
+        repacked = False
+        plan_seconds = 0.0
+        if hit:
+            self._cache.move_to_end(key)
+            self.stats["plan_cache_hits"] += 1
+            self.stats["plan_seconds_saved"] += \
+                entry.plan.stats["plan_seconds"]
+            val_fp = (values_fingerprint(a), values_fingerprint(b))
+            if val_fp != entry.val_fp:
+                # values-only path: refill payload stacks, keep the plan,
+                # the schedules and the compiled executable — and only for
+                # the side(s) whose values actually changed (BC's backward
+                # sweep keeps the adjacency operand bit-identical while
+                # the frontier values move every level)
+                new_a, new_b = entry.repack(
+                    entry.plan,
+                    a if val_fp[0] != entry.val_fp[0] else None,
+                    b if val_fp[1] != entry.val_fp[1] else None)
+                import jax
+                if new_a is not None:
+                    entry.args[0] = jax.device_put(new_a,
+                                                   entry.args[0].sharding)
+                if new_b is not None:
+                    entry.args[1] = jax.device_put(new_b,
+                                                   entry.args[1].sharding)
+                entry.val_fp = val_fp
+                self.stats["payload_repacks"] += 1
+                repacked = True
+        else:
+            t0 = time.perf_counter()
+            entry = self._build(a, b, algorithm, nparts, grid, layers, bs,
+                                nblocks, semiring, engine, dtype)
+            plan_seconds = time.perf_counter() - t0
+            self.stats["plan_cache_misses"] += 1
+            self._cache[key] = entry
+            while len(self._cache) > self.maxsize:
+                self._cache.popitem(last=False)
+                self.stats["evictions"] += 1
+
+        out = np.asarray(entry.fn(*entry.args))
+        c = entry.decode(entry.plan, out)
+        s = entry.plan.stats
+        self.last_call = dict(
+            cache_hit=hit, repacked=repacked, algorithm=algorithm,
+            plan_seconds=plan_seconds,
+            comm_bytes_planned=s["comm_bytes_planned"],
+            comm_bytes_padded=s["comm_bytes_padded"],
+            messages=s["messages"], dense_flops=s["dense_flops"])
+        return c
+
+    # ---- maintenance ------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def clear(self) -> None:
+        """Drop every cached plan/executable (stats are kept)."""
+        self._cache.clear()
+        self._blockize_cache.clear()

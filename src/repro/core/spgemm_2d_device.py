@@ -66,7 +66,8 @@ from .semiring import PLUS_TIMES, Semiring
 from .sparse import CSC, from_coo
 
 __all__ = ["SummaDevicePlan", "build_summa_plan", "compile_summa",
-           "run_device_summa", "decode_summa_output"]
+           "run_device_summa", "decode_summa_output",
+           "repack_summa_payloads"]
 
 
 @dataclasses.dataclass
@@ -121,6 +122,61 @@ def _split_rows(sub: CSC, row_part: Partition1D) -> list:
     return out
 
 
+def _blockize_mesh_a(a: CSC, grid: int, layers: int, bs: int, dtype,
+                     semiring: Semiring, part_m: Partition1D,
+                     part_k: Partition1D):
+    """a_blk[r][s][l]: A rows part_m[r] × k-piece (l*grid + s), owner
+    (r, s, l); plus per-block stored-entry counts (explicit identity-valued
+    entries included — an oblivious SUMMA moves stored entries regardless
+    of value) for the element-level comm model."""
+    fill = semiring.zero
+    a_blk = [[[None] * layers for _ in range(grid)] for _ in range(grid)]
+    a_nnzb = np.zeros((grid, grid, layers), dtype=np.int64)
+    for l in range(layers):
+        for s in range(grid):
+            # slice each k-piece of A once, then bin its rows into the
+            # grid row blocks in one COO pass (not grid re-slices)
+            klo, khi = part_k.part_slice(l * grid + s)
+            for r, blk in enumerate(_split_rows(a.col_slice(klo, khi),
+                                                part_m)):
+                a_blk[r][s][l] = from_csc(blk, bs=bs, dtype=dtype, fill=fill)
+                a_nnzb[r, s, l] = blk.nnz
+    return a_blk, a_nnzb
+
+
+def _blockize_mesh_b(b: CSC, grid: int, layers: int, bs: int, dtype,
+                     semiring: Semiring, part_n: Partition1D,
+                     part_k: Partition1D):
+    """b_blk[s][c][l]: B k-piece (l*grid + s) × cols part_n[c], owner
+    (s, c, l); counts as in :func:`_blockize_mesh_a`."""
+    fill = semiring.zero
+    b_blk = [[[None] * layers for _ in range(grid)] for _ in range(grid)]
+    b_nnzb = np.zeros((grid, grid, layers), dtype=np.int64)
+    for c in range(grid):
+        # each column part of B once, rows binned into the grid*layers
+        # k-pieces
+        nlo, nhi = part_n.part_slice(c)
+        for p, blk in enumerate(_split_rows(b.col_slice(nlo, nhi), part_k)):
+            b_blk[p % grid][c][p // grid] = from_csc(blk, bs=bs, dtype=dtype,
+                                                     fill=fill)
+            b_nnzb[p % grid, c, p // grid] = blk.nnz
+    return b_blk, b_nnzb
+
+
+def _pack_side(blk, grid: int, layers: int, max_n: int, bs: int, dtype,
+               semiring: Semiring) -> np.ndarray:
+    """Fill one static (grid, grid, layers, max_n, bs, bs) payload stack
+    from a per-owner blockization (pads hold the additive identity)."""
+    tiles = semiring.fill((grid, grid, layers, max_n, bs, bs), dtype=dtype)
+    for r in range(grid):
+        for c in range(grid):
+            for l in range(layers):
+                xb = blk[r][c][l]
+                if xb.ntiles:
+                    tiles[r, c, l, :xb.ntiles] = xb.tiles
+    return tiles
+
+
 def build_summa_plan(a: CSC, b: CSC, grid: int,
                      layers: int = 1,
                      bs: int = 128,
@@ -149,33 +205,10 @@ def build_summa_plan(a: CSC, b: CSC, grid: int,
     n_tile_off = [part_n.part_slice(c)[0] // bs for c in range(grid)]
 
     # ---- blockize every block of the 3D distribution -----------------------
-    # a_blk[r][s][l]: A rows part_m[r] x k-piece (l*grid + s)  (owner (r,s,l))
-    # b_blk[s][c][l]: B k-piece (l*grid + s) x cols part_n[c]  (owner (s,c,l))
-    fill = semiring.zero
-    a_blk = [[[None] * layers for _ in range(grid)] for _ in range(grid)]
-    b_blk = [[[None] * layers for _ in range(grid)] for _ in range(grid)]
-    # stored-entry counts per block, recorded from the CSC blocks (explicit
-    # identity-valued entries included — an oblivious SUMMA moves stored
-    # entries regardless of value), for the element-level comm model below
-    a_nnzb = np.zeros((grid, grid, layers), dtype=np.int64)
-    b_nnzb = np.zeros((grid, grid, layers), dtype=np.int64)
-    for l in range(layers):
-        for s in range(grid):
-            # slice each k-piece of A once, then bin its rows into the
-            # grid row blocks in one COO pass (not grid re-slices)
-            klo, khi = part_k.part_slice(l * grid + s)
-            for r, blk in enumerate(_split_rows(a.col_slice(klo, khi),
-                                                part_m)):
-                a_blk[r][s][l] = from_csc(blk, bs=bs, dtype=dtype, fill=fill)
-                a_nnzb[r, s, l] = blk.nnz
-    for c in range(grid):
-        # likewise each column part of B once, rows binned into the
-        # grid*layers k-pieces
-        nlo, nhi = part_n.part_slice(c)
-        for p, blk in enumerate(_split_rows(b.col_slice(nlo, nhi), part_k)):
-            b_blk[p % grid][c][p // grid] = from_csc(blk, bs=bs, dtype=dtype,
-                                                     fill=fill)
-            b_nnzb[p % grid, c, p // grid] = blk.nnz
+    a_blk, a_nnzb = _blockize_mesh_a(a, grid, layers, bs, dtype, semiring,
+                                     part_m, part_k)
+    b_blk, b_nnzb = _blockize_mesh_b(b, grid, layers, bs, dtype, semiring,
+                                     part_n, part_k)
 
     na_max = max((a_blk[r][s][l].ntiles for r in range(grid)
                   for s in range(grid) for l in range(layers)), default=0)
@@ -183,16 +216,8 @@ def build_summa_plan(a: CSC, b: CSC, grid: int,
                   for c in range(grid) for l in range(layers)), default=0)
     max_na, max_nb = max(na_max, 1), max(nb_max, 1)
 
-    a_tiles = semiring.fill((grid, grid, layers, max_na, bs, bs), dtype=dtype)
-    b_tiles = semiring.fill((grid, grid, layers, max_nb, bs, bs), dtype=dtype)
-    for r in range(grid):
-        for c in range(grid):
-            for l in range(layers):
-                ab, bb = a_blk[r][c][l], b_blk[r][c][l]
-                if ab.ntiles:
-                    a_tiles[r, c, l, :ab.ntiles] = ab.tiles
-                if bb.ntiles:
-                    b_tiles[r, c, l, :bb.ntiles] = bb.tiles
+    a_tiles = _pack_side(a_blk, grid, layers, max_na, bs, dtype, semiring)
+    b_tiles = _pack_side(b_blk, grid, layers, max_nb, bs, dtype, semiring)
 
     # ---- per-device schedules over the gathered stacks ---------------------
     # Gathered layout on device (r, c, l): stage s's A block occupies slots
@@ -365,8 +390,43 @@ def build_summa_plan(a: CSC, b: CSC, grid: int,
     )
 
 
+def repack_summa_payloads(plan: SummaDevicePlan,
+                          a: Optional[CSC] = None,
+                          b: Optional[CSC] = None
+                          ) -> Tuple[Optional[np.ndarray],
+                                     Optional[np.ndarray]]:
+    """Fresh payload stacks for *structure-identical* operands.
+
+    The SUMMA analogue of ``spgemm_1d_device.repack_ring_payloads``:
+    re-blockize the changed side(s) on the plan's tile-snapped partitions
+    and refill the static stacks (``None`` operand → ``None`` stack, so an
+    unchanged operand is never re-blockized), leaving schedules / visit
+    masks / decode coordinates untouched so the compiled executable can be
+    reused without retracing (``core.session``'s values-only cache-hit
+    path).
+    """
+    dtype = plan.a_tiles.dtype
+    a_tiles = b_tiles = None
+    if a is not None:
+        a_blk, _ = _blockize_mesh_a(a, plan.grid, plan.layers, plan.bs,
+                                    dtype, plan.semiring, plan.part_m,
+                                    plan.part_k)
+        a_tiles = _pack_side(a_blk, plan.grid, plan.layers,
+                             plan.a_tiles.shape[3], plan.bs, dtype,
+                             plan.semiring)
+    if b is not None:
+        b_blk, _ = _blockize_mesh_b(b, plan.grid, plan.layers, plan.bs,
+                                    dtype, plan.semiring, plan.part_n,
+                                    plan.part_k)
+        b_tiles = _pack_side(b_blk, plan.grid, plan.layers,
+                             plan.b_tiles.shape[3], plan.bs, dtype,
+                             plan.semiring)
+    return a_tiles, b_tiles
+
+
 def _make_body(plan: SummaDevicePlan, axes, engine: str,
-               interpret: Optional[bool]):
+               interpret: Optional[bool],
+               trace_probe: Optional[callable] = None):
     """The per-device body run under shard_map on the 3-axis mesh."""
     bs, layers = plan.bs, plan.layers
     nc_max = plan.nc_max
@@ -375,6 +435,10 @@ def _make_body(plan: SummaDevicePlan, axes, engine: str,
     ax_r, ax_c, ax_l = axes
 
     def body(a_tiles, b_tiles, a_slot, b_slot, c_slot, flags, visit):
+        # the body only executes while being traced, so a host-side callback
+        # here counts (re)traces exactly — the session's compile-count probe
+        if trace_probe is not None:
+            trace_probe()
         # shapes inside shard_map (leading (1,1,1) mesh block stripped)
         a_tiles = a_tiles[0, 0, 0]       # (max_na, bs, bs)
         b_tiles = b_tiles[0, 0, 0]
@@ -412,13 +476,16 @@ def compile_summa(plan: SummaDevicePlan,
                   axes: Tuple[str, str, str] = ("gr", "gc", "gl"),
                   engine: str = "auto",
                   interpret: Optional[bool] = None,
-                  semiring: Optional[Semiring] = None):
+                  semiring: Optional[Semiring] = None,
+                  trace_probe: Optional[callable] = None):
     """Device-put the plan and jit the SUMMA body; returns ``(fn, args)``.
 
     ``fn(*args)`` yields the raw ``(grid, grid, layers, nc_max, bs, bs)``
     output stacks (identical across the layer axis after the merge). Split
     from :func:`run_device_summa` so benchmarks can warm the jit cache once
     and time repeated executions of the same compiled callable.
+    ``trace_probe`` fires from the traced body at trace time only (the
+    session's compile-count probe).
     """
     engine = resolve_engine(engine)
     check_plan_semiring(plan.semiring, semiring)
@@ -430,7 +497,7 @@ def compile_summa(plan: SummaDevicePlan,
         plan.a_tiles, plan.b_tiles, plan.a_slot, plan.b_slot,
         plan.c_slot, plan.flags, plan.visit)]
 
-    body = _make_body(plan, axes, engine, interpret)
+    body = _make_body(plan, axes, engine, interpret, trace_probe)
     # check_rep=False: the legacy replication checker has no rule for
     # pallas_call (see repro.compat.shard_map); the layer reduce makes the
     # output replicated over the layer axis, which out_specs deliberately

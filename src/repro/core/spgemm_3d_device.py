@@ -42,10 +42,10 @@ from .semiring import PLUS_TIMES, Semiring
 from .sparse import CSC
 from .spgemm_2d_device import (SummaDevicePlan, build_summa_plan,
                                compile_summa, decode_summa_output,
-                               run_device_summa)
+                               repack_summa_payloads, run_device_summa)
 
 __all__ = ["build_summa3d_plan", "compile_summa3d", "run_device_summa3d",
-           "decode_summa3d_output"]
+           "decode_summa3d_output", "repack_summa3d_payloads"]
 
 
 def build_summa3d_plan(a: CSC, b: CSC, grid: int, layers: int,
@@ -57,8 +57,10 @@ def build_summa3d_plan(a: CSC, b: CSC, grid: int, layers: int,
                             semiring=semiring)
 
 
-# execution and decode are identical to the generalized SUMMA path — the
-# layer reduce activates whenever plan.layers > 1
+# execution, decode and the values-only payload repack are identical to the
+# generalized SUMMA path — the layer reduce activates whenever
+# plan.layers > 1
 compile_summa3d = compile_summa
 run_device_summa3d = run_device_summa
 decode_summa3d_output = decode_summa_output
+repack_summa3d_payloads = repack_summa_payloads

@@ -1,0 +1,188 @@
+"""MCL and randomized-sketching apps vs NumPy oracles.
+
+Both apps route every multiply through ``core.session.SpGEMMSession``;
+these tests pin them end-to-end against dense numpy references on both
+compute engines, including the degenerate shapes the issue calls out:
+fully-pruned MCL iterations, empty sketch rows, 1×1 matrices and
+non-tile-multiple dims.
+
+The device expansion runs in f32 (tile products), so the MCL oracle
+(``apps.mcl.mcl_dense_reference`` — dense numpy, an independent path from
+the sparse/device implementation) performs its matmul in f32 too; the
+cluster readout is re-derived here independently. Comparisons are
+tolerance-based. Sketch operands are integer-valued, so sketched results
+must match the numpy oracle bitwise (every partial sum is f32-exact).
+"""
+
+import numpy as np
+import pytest
+
+from repro.apps import mcl, sketch_apply, sketch_stream, count_sketch
+from repro.apps.mcl import (add_self_loops, chaos, clusters_from_matrix,
+                            column_normalize, inflate, mcl_dense_reference,
+                            prune_small)
+from repro.core import SpGEMMSession, block_diagonal_noise, erdos_renyi, \
+    from_coo, from_dense
+
+ENGINES = ("pallas", "jnp")
+
+
+def _dense_clusters(m):
+    n = m.shape[1]
+    labels = np.arange(n, dtype=np.int64)
+    nonempty = np.nonzero(m.max(axis=0) > 0)[0]
+    labels[nonempty] = np.argmax(m[:, nonempty], axis=0)
+    return labels
+
+
+# ---------------------------------------------------------------------------
+# MCL
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_mcl_matches_dense_oracle(engine):
+    """Community graph, non-tile-multiple dims: final operator and cluster
+    labels agree with the dense numpy reference on both engines."""
+    g = block_diagonal_noise(50, 5, d_in=5.0, d_out=0.1, seed=3)
+    g.data[:] = np.abs(g.data) + 0.1
+    res = mcl(g, inflation=2.0, prune_threshold=1e-3, bs=16, engine=engine)
+    ref, ref_it = mcl_dense_reference(g.to_dense(), inflation=2.0,
+                                      prune_threshold=1e-3)
+    assert res.iterations == ref_it
+    np.testing.assert_allclose(res.matrix.to_dense(), ref,
+                               rtol=1e-4, atol=1e-7)
+    np.testing.assert_array_equal(res.clusters, _dense_clusters(ref))
+    assert res.converged
+
+
+def test_mcl_recovers_planted_communities():
+    """Well-separated blocks: each planted community maps to one cluster."""
+    g = block_diagonal_noise(48, 3, d_in=6.0, d_out=0.0, seed=5)
+    g.data[:] = np.abs(g.data) + 0.5
+    res = mcl(g, bs=16)
+    assert res.converged
+    planted = np.arange(48) // 16
+    # clusters must not straddle planted blocks
+    for c in np.unique(res.clusters):
+        members = np.nonzero(res.clusters == c)[0]
+        assert len(np.unique(planted[members])) == 1
+
+
+def test_mcl_fully_pruned_iteration():
+    """A prune threshold above every entry empties the operator: the loop
+    must terminate cleanly with all-singleton clusters."""
+    g = erdos_renyi(20, 20, 3.0, seed=1)
+    g.data[:] = np.abs(g.data) + 0.1
+    res = mcl(g, prune_threshold=2.0, bs=16)
+    assert res.converged
+    assert res.matrix.nnz == 0
+    np.testing.assert_array_equal(res.clusters, np.arange(20))
+
+
+def test_mcl_one_by_one():
+    g = from_coo([0], [0], [2.0], (1, 1))
+    res = mcl(g, bs=16)
+    assert res.converged
+    np.testing.assert_array_equal(res.clusters, [0])
+
+
+def test_mcl_session_amortizes_converged_tail():
+    """Once the sparsity pattern stops changing, expansions are
+    plan-cache hits (the session's whole point for MCL)."""
+    g = block_diagonal_noise(48, 3, d_in=6.0, d_out=0.0, seed=5)
+    g.data[:] = np.abs(g.data) + 0.5
+    session = SpGEMMSession()
+    res = mcl(g, session=session, bs=16)
+    assert res.iterations >= 3
+    assert session.stats["plan_cache_hits"] >= 1
+    assert session.stats["plan_cache_hits"] + \
+        session.stats["plan_cache_misses"] == res.iterations
+
+
+def test_mcl_operators_host_invariants():
+    """The host-side elementwise pieces in isolation."""
+    g = erdos_renyi(30, 30, 3.0, seed=2)
+    g.data[:] = np.abs(g.data) + 0.1
+    m = column_normalize(add_self_loops(g))
+    sums = m.to_dense().sum(axis=0)
+    np.testing.assert_allclose(sums, 1.0, rtol=1e-12)
+    infl = inflate(m, 2.0)
+    np.testing.assert_allclose(infl.to_dense().sum(axis=0), 1.0, rtol=1e-12)
+    assert chaos(infl) >= 0.0
+    pruned = prune_small(m, 10.0)
+    assert pruned.nnz == 0 and chaos(pruned) == 0.0
+    np.testing.assert_array_equal(clusters_from_matrix(pruned),
+                                  np.arange(30))
+
+
+# ---------------------------------------------------------------------------
+# randomized sketching
+# ---------------------------------------------------------------------------
+
+def _int_matrix(m, n, seed, d=4.0):
+    a = erdos_renyi(m, n, d, seed=seed)
+    a.data[:] = np.rint(2 * a.data)
+    a.data[a.data == 0] = 1.0
+    return a
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("side", ("left", "right"))
+def test_sketch_matches_numpy_oracle(engine, side):
+    """S·A and A·Sᵀ vs the dense numpy product, bitwise (int operands),
+    on non-tile-multiple dims."""
+    a = _int_matrix(50, 37, seed=1)
+    n = a.nrows if side == "left" else a.ncols
+    s = count_sketch(9, n, seed=4)
+    res = sketch_apply(a, s, side=side, bs=16, engine=engine)
+    if side == "left":
+        ref = s.to_dense() @ a.to_dense()
+        assert res.sketched.shape == (9, 37)
+    else:
+        ref = a.to_dense() @ s.to_dense().T
+        assert res.sketched.shape == (50, 9)       # tall-and-skinny
+    np.testing.assert_array_equal(res.sketched.to_dense(),
+                                  ref.astype(np.float32))
+
+
+def test_sketch_empty_rows_and_one_by_one():
+    """dim >> n leaves sketch rows no column hashes to; 1×1 input."""
+    a = _int_matrix(5, 4, seed=2)
+    s = count_sketch(11, 5, seed=0)                # >= 6 rows empty
+    assert s.nnz == 5
+    res = sketch_apply(a, s, side="left", bs=16)
+    ref = s.to_dense() @ a.to_dense()
+    np.testing.assert_array_equal(res.sketched.to_dense(),
+                                  ref.astype(np.float32))
+
+    one = from_dense(np.array([[3.0]]))
+    s1 = count_sketch(3, 1, seed=1)
+    res1 = sketch_apply(one, s1, side="left", bs=16)
+    np.testing.assert_array_equal(
+        res1.sketched.to_dense(),
+        (s1.to_dense() @ one.to_dense()).astype(np.float32))
+
+
+def test_sketch_stream_amortizes_fixed_structure():
+    """A stream of same-pattern matrices through one sketch: every multiply
+    after the first is a cache hit, and each output matches its oracle."""
+    base = _int_matrix(40, 23, seed=6)
+    mats = []
+    for i in range(4):
+        m = base.astype(np.float64)
+        m.data[:] = base.data + i
+        m.data[m.data == 0] = 5.0
+        mats.append(m)
+    session = SpGEMMSession()
+    outs = sketch_stream(mats, dim=8, seed=3, session=session, bs=16)
+    assert [o.cache_hit for o in outs] == [False, True, True, True]
+    assert session.stats["payload_repacks"] == 3
+    sk = outs[0].sketch
+    for m, o in zip(mats, outs):
+        ref = sk.to_dense() @ m.to_dense()
+        np.testing.assert_array_equal(o.sketched.to_dense(),
+                                      ref.astype(np.float32))
+
+
+def test_sketch_stream_empty():
+    assert sketch_stream([], dim=4) == []

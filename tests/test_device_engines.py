@@ -16,9 +16,16 @@ shard_map + Pallas BSR substrate, so this module pins:
   * the **shared stats surface** (in-process; plans are host-side):
     every device plan carries ``device_common.REQUIRED_STATS``, planned
     comm never exceeds padded comm, a one-device mesh plans zero
-    communication, and the 2D device plan's element-level comm model
-    agrees with ``plan.summa2d_comm_volume`` evaluated on the same
-    (tile-snapped) partitions.
+    communication, and each device plan's element-level comm model agrees
+    with the host symbolic models on the same (tile-snapped) partitions —
+    2D vs ``plan.summa2d_comm_volume``, Split-3D vs the per-layer host
+    model, and the 1D ring (at element tile granularity) vs
+    ``plan.build_fetch_plan``;
+
+  * **permutation invariance** (8-device subprocess): decoding
+    (PAPᵀ)·(PBPᵀ) on the device ring equals the symmetrically permuted
+    host oracle for random and ``multilevel_partition``-derived P under
+    all three semirings — the device-path statement of fig04's claim.
 """
 
 import textwrap
@@ -171,3 +178,125 @@ def test_summa_plan_rejects_mismatched_semiring(gen_matrices):
     plan = build_summa_plan(a, a, grid=1, bs=32)
     with pytest.raises(ValueError, match="rebuild the plan"):
         compile_summa(plan, semiring=MIN_PLUS)
+
+
+def test_ring_comm_model_matches_fetch_plan(gen_matrices):
+    """1D ring vs host symbolic phase, at matched granularity.
+
+    At ``bs=1`` a payload tile is exactly one stored element, so the device
+    plan's tile accounting and ``build_fetch_plan``'s element accounting
+    describe the same transfers: the planned tile count must equal the
+    fetched-nonzero count (host bytes are 16/nnz, device bytes are
+    itemsize/tile — compare counts, not raw bytes). Holds with the
+    Algorithm-2 ``nblocks`` grouping too, since both sides cut the same
+    ordered nonzero-column list with the same ``linspace`` bounds. The
+    ring coalesces each (src, dst) pair's fetches into one ppermute
+    payload per step, so its message count equals the host plan's at
+    ``nblocks=1`` (one message per pair with any fetch)."""
+    from repro.core.plan import (BYTES_PER_NNZ, Partition1D,
+                                 build_fetch_plan)
+    from repro.core.spgemm_1d_device import build_device_plan
+    a = gen_matrices["er"]
+    b = gen_matrices["banded"]
+    for nparts in (2, 4):
+        pk = Partition1D.balanced(a.ncols, nparts)
+        pn = Partition1D.balanced(b.ncols, nparts)
+        for nblocks in (None, 3):
+            plan = build_device_plan(a, b, nparts=nparts, bs=1,
+                                     nblocks=nblocks)
+            host_nb = a.ncols if nblocks is None else nblocks
+            fp = build_fetch_plan(a, b, pk, pn, nblocks=host_nb)
+            ctx = (nparts, nblocks)
+            assert plan.stats["exact_tiles"] * BYTES_PER_NNZ \
+                == fp.total_fetched_bytes, ctx
+            if nblocks is None:
+                # exact fetch: required == fetched on both models
+                assert fp.total_fetched_bytes == fp.total_required_bytes
+            fp1 = build_fetch_plan(a, b, pk, pn, nblocks=1)
+            assert plan.stats["messages"] == fp1.total_messages, ctx
+
+
+def test_summa3d_device_model_matches_host_model(gen_matrices):
+    """Split-3D: the layered device plan's element-level gather model
+    equals the sum of per-layer 2D host models evaluated on the plan's own
+    tile-snapped partitions (layer l owns the contiguous k-pieces
+    [l*grid, (l+1)*grid) of ``part_k``) — extending the 2D-only check to
+    the third mesh axis, total and per-process."""
+    from repro.core.plan import summa2d_comm_volume
+    from repro.core.spgemm_3d_device import build_summa3d_plan
+    a = gen_matrices["er"]
+    for grid, layers, bs in ((2, 2, 32), (2, 3, 16)):
+        plan = build_summa3d_plan(a, a, grid=grid, layers=layers, bs=bs)
+        ks = plan.part_k.splits
+        total = 0
+        per_proc = np.zeros(grid * grid, dtype=np.int64)
+        for l in range(layers):
+            klo, khi = int(ks[l * grid]), int(ks[(l + 1) * grid])
+            a_l = a.col_slice(klo, khi)
+            b_l = a.transpose().col_slice(klo, khi).transpose()
+            vol = summa2d_comm_volume(
+                a_l, b_l, grid,
+                row_splits=plan.part_m.splits,
+                colk_splits=ks[l * grid:(l + 1) * grid + 1] - klo,
+                coln_splits=plan.part_n.splits)
+            total += vol["total_bytes"]
+            per_proc += vol["per_process_bytes"]
+        assert plan.stats["comm_bytes_model"] == total, (grid, layers)
+        np.testing.assert_array_equal(
+            plan.stats["comm_bytes_model_per_device"], per_proc)
+
+
+# ---------------------------------------------------------------------------
+# permutation invariance on the device ring (fig04's claim, device path)
+# ---------------------------------------------------------------------------
+
+PERM_SCRIPT = textwrap.dedent("""
+    import numpy as np
+    from repro.core import (by_name, from_dense, multilevel_partition,
+                            partition_to_permutation, permute_symmetric,
+                            random_permutation, spgemm)
+    from repro.core.spgemm_1d_device import build_device_plan, run_device_spgemm
+
+    n = 50          # not a multiple of bs=8: ragged boundary tiles move too
+    def int_mat(seed):
+        r = np.random.default_rng(seed)
+        dense = np.where(r.random((n, n)) < 0.12,
+                         np.rint(2 * r.standard_normal((n, n))), 0.0)
+        return from_dense(dense)
+    a = int_mat(1)
+    b = int_mat(2)
+
+    rep = multilevel_partition(a, 4, seed=0)
+    perm_ml, _ = partition_to_permutation(rep.parts, 4)
+    PERMS = [("random", random_permutation(n, seed=3)),
+             ("multilevel", perm_ml)]
+    case = 0
+    for pname, perm in PERMS:
+        ap = permute_symmetric(a, perm)
+        bp = permute_symmetric(b, perm)
+        for srname in ("plus_times", "bool_or_and", "min_plus"):
+            sr = by_name(srname)
+            # (P A Pt)(P B Pt) = P (A B) Pt: the device decode of the
+            # permuted operands must equal the permuted host oracle
+            plan = build_device_plan(ap, bp, nparts=4, bs=8, semiring=sr)
+            c = run_device_spgemm(plan)
+            orc = permute_symmetric(spgemm(a, b, sr), perm)
+            if srname == "plus_times":
+                orc = orc.prune(0.0)
+            ctx = (pname, srname)
+            assert np.array_equal(c.indptr, orc.indptr), ctx
+            assert np.array_equal(c.indices, orc.indices), ctx
+            assert np.array_equal(c.data, orc.data.astype(np.float32)), ctx
+            case += 1
+    print("CASES", case)
+    print("ALLOK")
+""")
+
+
+def test_permutation_invariance_on_device_ring():
+    """Device ring on symmetrically permuted operands decodes bitwise to
+    the permuted host oracle (integer-valued inputs), for random and
+    multilevel-partition-derived permutations, all three semirings."""
+    out = run_subprocess(PERM_SCRIPT, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "ALLOK" in out.stdout

@@ -1,0 +1,289 @@
+"""Persistent SpGEMM session — structure-keyed plan/executable caching.
+
+Pins the cache semantics of ``core.session.SpGEMMSession``:
+
+  * a structure-identical repeat multiply reports ``plan_seconds == 0``,
+    increments ``plan_cache_hits``, performs **zero retraces** (observed
+    through the engines' trace probe — the traced body fires a host
+    callback at trace time only) and decodes bitwise-identical to a
+    cold-plan run;
+  * a values-only change takes the payload-repack path (plan + executable
+    reused, still zero retraces) and matches a cold re-plan bitwise;
+  * one extra nonzero tile, a semiring change, an engine change and a
+    geometry change each force a cache miss;
+  * the LRU bound evicts oldest-first and the stats surface is exactly
+    ``device_common.SESSION_STATS``.
+
+In-process tests run the full shard_map + scheduled-kernel path at
+``nparts=1`` (smoke-test contract: the parent process sees one device);
+the multi-device semantics run in an 8-fake-device subprocess.
+"""
+
+import textwrap
+
+import numpy as np
+import pytest
+from _device_harness import run_subprocess
+
+from repro.core import SpGEMMSession, erdos_renyi, from_coo
+
+
+def _int_matrix(n=50, seed=3):
+    """Integer-valued operand: partial sums exact in f32, so session
+    results must agree bitwise with cold-plan runs."""
+    a = erdos_renyi(n, n, 4.0, seed=seed)
+    a.data[:] = np.rint(2 * a.data)
+    a.data[a.data == 0] = 1.0
+    return a
+
+
+def _cold_run(a, b, bs, semiring=None, engine="auto"):
+    from repro.core import PLUS_TIMES
+    from repro.core.spgemm_1d_device import (build_device_plan,
+                                             run_device_spgemm)
+    plan = build_device_plan(a, b, 1, bs=bs,
+                             semiring=semiring or PLUS_TIMES)
+    return run_device_spgemm(plan, engine=engine)
+
+
+def _assert_bitwise(c, ref):
+    assert np.array_equal(c.indptr, ref.indptr)
+    assert np.array_equal(c.indices, ref.indices)
+    assert np.array_equal(c.data, ref.data)
+
+
+def test_repeat_multiply_skips_planning_and_retrace():
+    """Second structure-identical multiply: plan_seconds == 0, hit counted,
+    zero retraces, bitwise-identical decode to a cold-plan run."""
+    a = _int_matrix()
+    s = SpGEMMSession()
+    c1 = s.matmul(a, a, bs=16)
+    assert s.stats["plan_cache_misses"] == 1
+    assert not s.last_call["cache_hit"]
+    assert s.last_call["plan_seconds"] > 0
+    traces_after_cold = s.stats["traces"]
+    assert traces_after_cold >= 1
+
+    c2 = s.matmul(a, a, bs=16)
+    assert s.stats["plan_cache_hits"] == 1
+    assert s.last_call["cache_hit"]
+    assert s.last_call["plan_seconds"] == 0.0
+    assert s.stats["traces"] == traces_after_cold      # zero retraces
+    assert s.stats["plan_seconds_saved"] > 0
+    _assert_bitwise(c2, c1)
+    _assert_bitwise(c1, _cold_run(a, a, bs=16))
+
+
+def test_values_only_change_repacks_without_replanning():
+    """Same structure, new values: cache hit + payload repack, no retrace,
+    and the decode matches a cold plan built on the new values bitwise."""
+    a = _int_matrix()
+    s = SpGEMMSession()
+    s.matmul(a, a, bs=16)
+    traces = s.stats["traces"]
+
+    a2 = a.astype(np.float64)
+    a2.data[:] = a.data * 3.0 + 1.0            # same structure, new values
+    c = s.matmul(a2, a2, bs=16)
+    assert s.last_call["cache_hit"] and s.last_call["repacked"]
+    assert s.stats["payload_repacks"] == 1
+    assert s.stats["traces"] == traces
+    _assert_bitwise(c, _cold_run(a2, a2, bs=16))
+
+    # bit-identical values again: the repack itself is skipped
+    s.matmul(a2, a2, bs=16)
+    assert s.last_call["cache_hit"] and not s.last_call["repacked"]
+    assert s.stats["payload_repacks"] == 1
+
+
+def test_one_sided_value_change_repacks_one_side():
+    """Only the changed operand is re-blockized (the repack helpers accept
+    None for the untouched side) and the decode still matches a cold
+    re-plan bitwise."""
+    a = _int_matrix(seed=1)
+    b = _int_matrix(seed=2)
+    s = SpGEMMSession()
+    s.matmul(a, b, bs=16)
+    traces = s.stats["traces"]
+    b2 = b.astype(np.float64)
+    b2.data[:] = b.data + 2.0
+    b2.data[b2.data == 0] = 1.0
+    c = s.matmul(a, b2, bs=16)
+    assert s.last_call["cache_hit"] and s.last_call["repacked"]
+    assert s.stats["traces"] == traces
+    _assert_bitwise(c, _cold_run(a, b2, bs=16))
+    # the partial-repack helper itself: untouched side comes back None
+    from repro.core.spgemm_1d_device import (build_device_plan,
+                                             repack_ring_payloads)
+    plan = build_device_plan(a, b, 1, bs=16)
+    new_a, new_b = repack_ring_payloads(plan, b=b2)
+    assert new_a is None and new_b is not None
+    assert new_b.shape == plan.b_tiles.shape
+
+
+def test_interpret_alongside_session_is_rejected():
+    """Apps fix the Pallas interpret policy at session construction; a
+    conflicting explicit interpret must not be silently ignored."""
+    from repro.apps import device_spgemm_fn, sketch_apply
+    from repro.apps.mcl import mcl
+    from repro.core import from_coo as _fc
+    s = SpGEMMSession()
+    with pytest.raises(ValueError, match="interpret"):
+        device_spgemm_fn(session=s, interpret=True)
+    one = _fc([0], [0], [1.0], (1, 1))
+    with pytest.raises(ValueError, match="interpret"):
+        mcl(one, session=s, interpret=True)
+    with pytest.raises(ValueError, match="interpret"):
+        sketch_apply(one, one, session=s, interpret=True)
+
+
+def test_one_extra_nonzero_tile_forces_miss():
+    """A single stored entry in a previously-empty tile is a different
+    structure: the session must re-plan and re-trace."""
+    a = _int_matrix()
+    s = SpGEMMSession()
+    s.matmul(a, a, bs=16)
+    traces = s.stats["traces"]
+
+    rows, cols, vals = a.to_coo()
+    # bottom-right corner tile of a 50x50 matrix at bs=16 is sparse; the
+    # exact position only needs to be previously absent
+    assert not ((rows == 49) & (cols == 49)).any()
+    a2 = from_coo(np.append(rows, 49), np.append(cols, 49),
+                  np.append(vals, 1.0), a.shape)
+    c = s.matmul(a2, a2, bs=16)
+    assert not s.last_call["cache_hit"]
+    assert s.stats["plan_cache_misses"] == 2
+    assert s.stats["traces"] > traces
+    _assert_bitwise(c, _cold_run(a2, a2, bs=16))
+
+
+def test_semiring_change_forces_miss():
+    from repro.core import MIN_PLUS
+    a = _int_matrix()
+    s = SpGEMMSession()
+    s.matmul(a, a, bs=16)
+    c = s.matmul(a, a, bs=16, semiring=MIN_PLUS)
+    assert not s.last_call["cache_hit"]
+    assert s.stats["plan_cache_misses"] == 2
+    _assert_bitwise(c, _cold_run(a, a, bs=16, semiring=MIN_PLUS))
+    # and the min-plus entry is itself now cached
+    s.matmul(a, a, bs=16, semiring=MIN_PLUS)
+    assert s.last_call["cache_hit"]
+
+
+def test_engine_and_geometry_are_separate_entries():
+    a = _int_matrix()
+    s = SpGEMMSession()
+    cp = s.matmul(a, a, bs=16, engine="pallas")
+    cj = s.matmul(a, a, bs=16, engine="jnp")
+    assert s.stats["plan_cache_misses"] == 2
+    _assert_bitwise(cp, cj)                     # engines agree bitwise
+    s.matmul(a, a, bs=8)                        # different tile size
+    assert s.stats["plan_cache_misses"] == 3
+    assert len(s) == 3
+
+
+def test_algorithms_share_session_not_entries():
+    """1D / 2D / 3D all run through one session on a single device and
+    decode identically; each algorithm is its own cache entry."""
+    a = _int_matrix()
+    s = SpGEMMSession()
+    c1 = s.matmul(a, a, algorithm="1d", nparts=1, bs=16)
+    c2 = s.matmul(a, a, algorithm="2d", grid=1, bs=16)
+    c3 = s.matmul(a, a, algorithm="3d", grid=1, layers=1, bs=16)
+    assert s.stats["plan_cache_misses"] == 3
+    _assert_bitwise(c2, c1)
+    _assert_bitwise(c3, c1)
+    for alg, kw in (("1d", dict(nparts=1)), ("2d", dict(grid=1)),
+                    ("3d", dict(grid=1, layers=1))):
+        s.matmul(a, a, algorithm=alg, bs=16, **kw)
+        assert s.last_call["cache_hit"], alg
+
+
+def test_lru_eviction_oldest_first():
+    mats = [_int_matrix(seed=i) for i in range(3)]
+    s = SpGEMMSession(maxsize=2)
+    for m in mats:
+        s.matmul(m, m, bs=16)
+    assert s.stats["evictions"] == 1 and len(s) == 2
+    s.matmul(mats[0], mats[0], bs=16)           # oldest was evicted
+    assert not s.last_call["cache_hit"]
+    s.matmul(mats[2], mats[2], bs=16)           # newest survived
+    assert s.last_call["cache_hit"]
+
+
+def test_session_stats_surface():
+    from repro.core.device_common import SESSION_STATS
+    s = SpGEMMSession()
+    assert set(s.stats) == set(SESSION_STATS)
+    a = _int_matrix()
+    s.matmul(a, a, bs=16)
+    s.matmul(a, a, bs=16)
+    assert set(s.stats) == set(SESSION_STATS)
+    assert s.stats["calls"] == 2
+
+
+def test_invalid_algorithm_and_maxsize():
+    a = _int_matrix()
+    s = SpGEMMSession()
+    with pytest.raises(ValueError, match="algorithm"):
+        s.matmul(a, a, algorithm="4d")
+    with pytest.raises(ValueError, match="maxsize"):
+        SpGEMMSession(maxsize=0)
+
+
+MULTI_DEVICE_SCRIPT = textwrap.dedent("""
+    import numpy as np
+    from repro.core import SpGEMMSession, by_name, erdos_renyi
+    from repro.core.spgemm_1d_device import build_device_plan, run_device_spgemm
+    from repro.core.spgemm_2d_device import build_summa_plan, run_device_summa
+
+    a = erdos_renyi(70, 70, 4.0, seed=9)
+    a.data[:] = np.rint(2 * a.data)
+    a.data[a.data == 0] = 1.0
+    a2 = a.astype(np.float64)
+    a2.data[:] = a.data * 2.0 + 1.0
+
+    s = SpGEMMSession()
+    for srname in ("plus_times", "bool_or_and", "min_plus"):
+        sr = by_name(srname)
+        c1 = s.matmul(a, a, nparts=4, bs=8, semiring=sr)
+        traces = s.stats["traces"]
+        c2 = s.matmul(a, a, nparts=4, bs=8, semiring=sr)
+        assert s.last_call["cache_hit"], srname
+        assert s.stats["traces"] == traces, srname
+        ref = run_device_spgemm(
+            build_device_plan(a, a, 4, bs=8, semiring=sr))
+        for x in (c1, c2):
+            assert np.array_equal(x.indptr, ref.indptr), srname
+            assert np.array_equal(x.indices, ref.indices), srname
+            assert np.array_equal(x.data, ref.data), srname
+        # values-only repack on the real multi-device ring
+        c3 = s.matmul(a2, a2, nparts=4, bs=8, semiring=sr)
+        assert s.last_call["repacked"], srname
+        assert s.stats["traces"] == traces, srname
+        ref3 = run_device_spgemm(
+            build_device_plan(a2, a2, 4, bs=8, semiring=sr))
+        assert np.array_equal(c3.data, ref3.data), srname
+        assert np.array_equal(c3.indices, ref3.indices), srname
+
+    # 2D SUMMA entries on a 2x2 grid through the same session
+    c2d = s.matmul(a, a, algorithm="2d", grid=2, bs=8)
+    t2d = s.stats["traces"]
+    c2d_rep = s.matmul(a2, a2, algorithm="2d", grid=2, bs=8)
+    assert s.last_call["cache_hit"] and s.last_call["repacked"]
+    assert s.stats["traces"] == t2d
+    ref2d = run_device_summa(build_summa_plan(a2, a2, grid=2, bs=8))
+    assert np.array_equal(c2d_rep.data, ref2d.data)
+    print("HITS", s.stats["plan_cache_hits"])
+    print("ALLOK")
+""")
+
+
+def test_session_on_8_devices():
+    """Cache-hit + values-repack semantics hold on a real multi-device
+    mesh for all three semirings (1D ring) and the 2D SUMMA grid."""
+    out = run_subprocess(MULTI_DEVICE_SCRIPT, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "ALLOK" in out.stdout

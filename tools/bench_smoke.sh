@@ -68,6 +68,39 @@ print(f"device-compare smoke OK: {len(matches)} oracle matches across "
       f"1d/2d/3d, {len(rows)} rows merged")
 PY
 
+# Session-amortization smoke: the persistent SpGEMM session must keep its
+# cached steady-state multiply >= 5x faster than plan-every-call on every
+# device algorithm, decode bitwise-identically to a cold-plan run, and run
+# all four app workloads (BC/AMG/MCL/sketch) against their oracles.
+python -m benchmarks.session_amortization --json BENCH_paper_figs.json
+
+python - <<'PY'
+import json
+
+rows = {r["name"]: r for r in json.load(open("BENCH_paper_figs.json"))["rows"]
+        if r["bench"] == "session_amortization"}
+assert rows, "session_amortization emitted no rows"
+
+for algo in ("1d", "2d", "3d"):
+    speedup = float(rows[f"{algo}/speedup_x"]["value"])
+    assert speedup >= 5.0, \
+        f"session cache win regressed on {algo}: {speedup:.1f}x < 5x floor"
+    match = float(rows[f"{algo}/match_oracle"]["value"])
+    assert match == 1.0, \
+        f"cached {algo} decode diverged from the cold-plan run"
+
+for app in ("bc", "amg", "mcl", "sketch"):
+    match = float(rows[f"apps/{app}/match_oracle"]["value"])
+    assert match == 1.0, f"session-backed {app} diverged from its oracle"
+
+hits = int(rows["apps/session_hits"]["value"])
+assert hits > 0, "shared app session recorded no plan-cache hits"
+print("session smoke OK: speedups "
+      + ", ".join(f"{a} {float(rows[f'{a}/speedup_x']['value']):.0f}x"
+                  for a in ("1d", "2d", "3d"))
+      + f"; {hits} app cache hits")
+PY
+
 # Device-BC smoke: betweenness centrality end-to-end on the device ring
 # (the fig13 --engine device adapter), scores checked against the local
 # oracle so the adapter and the semiring-generic engine path can't rot.
