@@ -290,13 +290,15 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
 
         # virtual A view (payloads indexed by stack slot), global k tile space
         virt = BlockSparse(
-            tiles=np.zeros((len(vrows), 1, 1), dtype=dtype),  # metadata only
+            tiles=np.zeros(  # replint: off=RS003 1x1 placeholder payloads; only tile coords feed build_schedule, values never read
+                (len(vrows), 1, 1), dtype=dtype),
             tile_rows=vrows, tile_cols=vcols,
             shape=(a_parts[i].shape[0], kg * bs),
             orig_shape=(a.nrows, a.ncols), bs=bs)
         bp = b_parts[i]
         bview = BlockSparse(
-            tiles=np.zeros((bp.ntiles, 1, 1), dtype=dtype),
+            tiles=np.zeros(  # replint: off=RS003 1x1 placeholder payloads; only tile coords feed build_schedule, values never read
+                (bp.ntiles, 1, 1), dtype=dtype),
             tile_rows=bp.tile_rows, tile_cols=bp.tile_cols,
             shape=(kg * bs, bp.shape[1]),
             orig_shape=(a.ncols, bp.orig_shape[1]), bs=bs)

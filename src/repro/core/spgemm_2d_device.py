@@ -266,11 +266,13 @@ def build_summa_plan(a: CSC, b: CSC, grid: int,
                             if slots_l else np.zeros(0, np.int64))
 
                 virt_a = BlockSparse(
-                    tiles=np.zeros((len(va_rows), 1, 1), dtype=dtype),
+                    tiles=np.zeros(  # replint: off=RS003 1x1 placeholder payloads; only tile coords feed build_schedule, values never read
+                        (len(va_rows), 1, 1), dtype=dtype),
                     tile_rows=va_rows, tile_cols=va_cols,
                     shape=(mg * bs, kg * bs), orig_shape=(m, k), bs=bs)
                 virt_b = BlockSparse(
-                    tiles=np.zeros((len(vb_rows), 1, 1), dtype=dtype),
+                    tiles=np.zeros(  # replint: off=RS003 1x1 placeholder payloads; only tile coords feed build_schedule, values never read
+                        (len(vb_rows), 1, 1), dtype=dtype),
                     tile_rows=vb_rows, tile_cols=vb_cols,
                     shape=(kg * bs, ng * bs), orig_shape=(k, n), bs=bs)
                 sched = build_schedule(virt_a, virt_b)

@@ -51,7 +51,8 @@ def local_spgemm_device(a: BlockSparse, b: BlockSparse,
     bs = a.bs
     if sched.nprod == 0:
         return BlockSparse(
-            tiles=np.zeros((0, bs, bs), dtype=a.tiles.dtype),
+            tiles=np.zeros(  # replint: off=RS003 zero-length stack of the empty product; no values exist to fill
+                (0, bs, bs), dtype=a.tiles.dtype),
             tile_rows=np.zeros(0, dtype=np.int32),
             tile_cols=np.zeros(0, dtype=np.int32),
             shape=(a.shape[0], b.shape[1]),

@@ -52,7 +52,7 @@ def _lower(cfg, shape, mesh, rules, opts):
     with use_rules(rules):
         if shape.kind == "train":
             step = make_train_step(
-                cfg, AdamWConfig(), use_kernel=False, interpret=True,
+                cfg, AdamWConfig(), use_kernel=False, interpret=None,
                 microbatches=opts.get("microbatches", 1))
             state_sds, state_shardings = state_specs(cfg, mesh, rules)
             batch_sds = batch_specs(cfg, shape, mesh, rules)
@@ -62,7 +62,7 @@ def _lower(cfg, shape, mesh, rules, opts):
                 return jitted.lower(state_sds, batch_sds)
         maker = make_prefill_step if shape.kind == "prefill" \
             else make_decode_step
-        step = maker(cfg, use_kernel=False, interpret=True)
+        step = maker(cfg, use_kernel=False, interpret=None)
         param_sds, param_shardings = state_specs(
             cfg, mesh, rules, with_opt=False)
         batch_sds = batch_specs(cfg, shape, mesh, rules)

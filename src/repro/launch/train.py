@@ -51,7 +51,7 @@ def main(argv=None):
     opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
                           warmup_steps=max(args.steps // 10, 1))
     step_fn = jax.jit(make_train_step(
-        cfg, opt_cfg, use_kernel=False, interpret=True,
+        cfg, opt_cfg, use_kernel=False, interpret=None,
         compress_grads=args.compress_grads,
         microbatches=args.microbatches))
     state = init_train_state(cfg, params, compress=args.compress_grads)

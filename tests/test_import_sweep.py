@@ -5,22 +5,48 @@ JAX renames public APIs between minor releases (``jax.shard_map``,
 those names through ``repro.compat``, and this sweep makes the next rename
 fail loudly at test-collection time — one red test per broken module —
 instead of deep inside a subprocess-spawned assertion where the traceback
-is a truncated stderr string.
+is a truncated stderr string. (Statically, ``tools/replint`` rule RS002
+forbids spelling a drifting name outside compat.py in the first place;
+this sweep is the runtime half of that contract.)
 """
 
 import importlib
 import os
 import pkgutil
+from pathlib import Path
 
 import pytest
 
+SRC_ROOT = Path(__file__).resolve().parents[1] / "src" / "repro"
+
 
 def _all_modules():
-    pkg = importlib.import_module("repro")
+    """Every ``repro.*`` module, derived from the ``src/repro`` file tree.
+
+    Filesystem-derived (not ``pkgutil``-only) so the sweep cannot silently
+    rot: a new subpackage missing its ``__init__.py`` — which
+    ``walk_packages`` would skip without a sound — still produces a
+    parametrized case here, and fails it loudly.
+    """
     names = ["repro"]
-    for info in pkgutil.walk_packages(pkg.__path__, prefix="repro."):
-        names.append(info.name)
-    return sorted(names)
+    for p in sorted(SRC_ROOT.rglob("*.py")):
+        parts = p.relative_to(SRC_ROOT.parent).with_suffix("").parts
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        names.append(".".join(parts))
+    return sorted(set(names))
+
+
+def test_tree_matches_pkgutil_walk():
+    """Every module the filesystem sweep finds is reachable by a plain
+    package walk too — i.e. no orphan .py file sits outside the package
+    graph (missing ``__init__.py`` in an ancestor directory)."""
+    pkg = importlib.import_module("repro")
+    walked = {"repro"} | {info.name for info in pkgutil.walk_packages(
+        pkg.__path__, prefix="repro.")}
+    missing = set(_all_modules()) - walked
+    assert not missing, \
+        f"modules on disk but invisible to the import system: {missing}"
 
 
 @pytest.mark.parametrize("name", _all_modules())

@@ -1,0 +1,490 @@
+"""replint — the invariant linter's own test suite.
+
+Three layers:
+
+  * per-rule fixtures: a bad snippet placed at an in-scope path must
+    produce exactly the expected (rule, file, line); the good twin — and
+    the same bad snippet at an allowlisted / out-of-scope path — must
+    lint clean;
+  * mechanism semantics: suppression comments (justified / bare / wrong
+    id), scope vs allowlist matching, parse errors, the JSON CLI;
+  * the tier-1 self-lint: the real ``src tests benchmarks`` tree is clean,
+    and seeded regressions (raw ``pallas_call``, a literal ``0.0`` fill in
+    a device engine, a direct ``build_device_plan`` call from ``apps/``)
+    are each caught.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:  # tools/ is a repo-root package
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.replint import all_rules, lint_paths, lint_source  # noqa: E402
+
+RULE_IDS = ("RS001", "RS002", "RS003", "RS004", "RS005", "RS006", "RS007")
+
+
+def lint_snippet(tmp_path, relpath: str, source: str):
+    """Write ``source`` at ``relpath`` under a fake repo root and lint it."""
+    f = tmp_path / relpath
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(textwrap.dedent(source))
+    findings, n_files, n_suppressed = lint_paths([f], root=tmp_path)
+    assert n_files == 1
+    return findings, n_suppressed
+
+
+def rules_hit(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ---------------------------------------------------------------------------
+# registry sanity
+# ---------------------------------------------------------------------------
+
+def test_registry_has_all_rules():
+    ids = [r.RULE_ID for r in all_rules()]
+    assert len(ids) == len(set(ids))
+    for rid in RULE_IDS:
+        assert rid in ids
+
+
+# ---------------------------------------------------------------------------
+# RS001 — raw pallas_call
+# ---------------------------------------------------------------------------
+
+BAD_RS001 = """\
+    from jax.experimental import pallas as pl
+
+    def my_kernel(x):
+        return pl.pallas_call(body, out_shape=x)(x)
+"""
+
+
+def test_rs001_bad(tmp_path):
+    findings, _ = lint_snippet(
+        tmp_path, "src/repro/kernels/flash_attention/k.py", BAD_RS001)
+    assert [(f.rule, f.path, f.line) for f in findings] == \
+        [("RS001", "src/repro/kernels/flash_attention/k.py", 4)]
+
+
+def test_rs001_import_form(tmp_path):
+    findings, _ = lint_snippet(
+        tmp_path, "src/repro/core/x.py",
+        "from jax.experimental.pallas import pallas_call\n")
+    assert rules_hit(findings) == ["RS001"]
+    assert findings[0].line == 1
+
+
+def test_rs001_allowed_in_launcher(tmp_path):
+    findings, _ = lint_snippet(
+        tmp_path, "src/repro/kernels/launch.py", BAD_RS001)
+    assert findings == []
+
+
+def test_rs001_good(tmp_path):
+    findings, _ = lint_snippet(tmp_path, "src/repro/kernels/k.py", """\
+        from .launch import launch
+
+        def my_kernel(x, out_shape):
+            return launch(body, grid=(1,), out_shape=out_shape)(x)
+    """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RS002 — drifting JAX names
+# ---------------------------------------------------------------------------
+
+def test_rs002_shard_map_import(tmp_path):
+    findings, _ = lint_snippet(
+        tmp_path, "src/repro/core/x.py",
+        "from jax.experimental.shard_map import shard_map\n")
+    assert [(f.rule, f.line) for f in findings] == [("RS002", 1)]
+
+
+def test_rs002_compiler_params_attr(tmp_path):
+    findings, _ = lint_snippet(tmp_path, "src/repro/kernels/k.py", """\
+        from jax.experimental.pallas import tpu as pltpu
+
+        def params():
+            return pltpu.TPUCompilerParams(dimension_semantics=("parallel",))
+    """)
+    assert [(f.rule, f.line) for f in findings] == [("RS002", 4)]
+
+
+def test_rs002_shim_redefinition(tmp_path):
+    findings, _ = lint_snippet(
+        tmp_path, "src/repro/serve/x.py",
+        "def cpu_device_mesh(n):\n    return None\n")
+    assert [(f.rule, f.line) for f in findings] == [("RS002", 1)]
+
+
+def test_rs002_allowed_in_compat(tmp_path):
+    findings, _ = lint_snippet(tmp_path, "src/repro/compat.py", """\
+        import jax
+
+        if hasattr(jax, "shard_map"):
+            impl = jax.shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, **kw):
+            return impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    """)
+    assert findings == []
+
+
+def test_rs002_good_compat_import(tmp_path):
+    findings, _ = lint_snippet(
+        tmp_path, "src/repro/core/x.py",
+        "from ..compat import shard_map, cpu_device_mesh\n")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RS003 — literal zero fill in device engines
+# ---------------------------------------------------------------------------
+
+BAD_RS003 = """\
+    import numpy as np
+
+    def pack(shape, dtype, semiring):
+        acc = np.zeros(shape, dtype=dtype)
+        pad = np.full(shape, 0.0, dtype=dtype)
+        acc[0] = 0.0
+        return np.pad(pad, 1, constant_values=0.0)
+"""
+
+
+def test_rs003_bad(tmp_path):
+    findings, _ = lint_snippet(
+        tmp_path, "src/repro/core/spgemm_9d_device.py", BAD_RS003)
+    assert [(f.rule, f.line) for f in findings] == \
+        [("RS003", 4), ("RS003", 5), ("RS003", 6), ("RS003", 7)]
+
+
+def test_rs003_good(tmp_path):
+    findings, _ = lint_snippet(
+        tmp_path, "src/repro/core/spgemm_9d_device.py", """\
+        import numpy as np
+
+        def pack(shape, dtype, semiring):
+            acc = semiring.fill(shape, dtype=dtype)
+            pad = np.full(shape, semiring.zero, dtype=dtype)
+            slots = np.zeros(shape, dtype=np.int32)   # index metadata
+            hit = np.zeros(shape, dtype=bool)
+            sent = np.full(shape, -1, dtype=np.int64)
+            acc[0] = semiring.zero
+            return acc, pad, slots, hit, sent
+    """)
+    assert findings == []
+
+
+def test_rs003_out_of_scope(tmp_path):
+    # host/oracle modules may zero-fill — the contract binds engines only
+    findings, _ = lint_snippet(
+        tmp_path, "src/repro/core/spgemm_1d.py", BAD_RS003)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RS004 — session bypass from the app/serve layer
+# ---------------------------------------------------------------------------
+
+BAD_RS004 = """\
+    from repro.core.spgemm_1d_device import build_device_plan, compile_ring
+
+    def run(a, b):
+        plan = build_device_plan(a, b, nparts=4, bs=64)
+        fn, args = compile_ring(plan)
+        return fn(*args)
+"""
+
+
+def test_rs004_bad(tmp_path):
+    findings, _ = lint_snippet(tmp_path, "src/repro/apps/evil.py", BAD_RS004)
+    assert rules_hit(findings) == ["RS004"]
+    # the import (x2 names) and both call sites
+    assert [f.line for f in findings] == [1, 1, 4, 5]
+
+
+def test_rs004_serve_in_scope(tmp_path):
+    findings, _ = lint_snippet(
+        tmp_path, "src/repro/serve/engine.py", BAD_RS004)
+    assert rules_hit(findings) == ["RS004"]
+
+
+def test_rs004_core_out_of_scope(tmp_path):
+    # core/session.py is exactly where these calls belong
+    findings, _ = lint_snippet(tmp_path, "src/repro/core/x.py", BAD_RS004)
+    assert findings == []
+
+
+def test_rs004_good_session(tmp_path):
+    findings, _ = lint_snippet(tmp_path, "src/repro/apps/good.py", """\
+        from repro.core.session import SpGEMMSession
+
+        def run(a, b, session=None):
+            session = session or SpGEMMSession()
+            return session.spgemm(a, b, algorithm="1d")
+    """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RS005 — per-nonzero loops in planner hot functions
+# ---------------------------------------------------------------------------
+
+def test_rs005_for_over_indices(tmp_path):
+    findings, _ = lint_snippet(tmp_path, "src/repro/core/x.py", """\
+        def build_device_plan(a, b):
+            out = []
+            for r in a.indices:
+                out.append(r)
+            return out
+    """)
+    assert [(f.rule, f.line) for f in findings] == [("RS005", 3)]
+
+
+def test_rs005_zip_rows_cols_comprehension(tmp_path):
+    findings, _ = lint_snippet(tmp_path, "src/repro/core/x.py", """\
+        def from_csc(a, rows, cols):
+            return [(r, c) for r, c in zip(rows, cols)]
+    """)
+    assert [(f.rule, f.line) for f in findings] == [("RS005", 2)]
+
+
+def test_rs005_nonzero_iteration(tmp_path):
+    findings, _ = lint_snippet(tmp_path, "src/repro/core/x.py", """\
+        import numpy as np
+
+        def decode_tiles(out):
+            acc = 0.0
+            for i in np.nonzero(out)[0]:
+                acc += out[i]
+            return acc
+    """)
+    assert [(f.rule, f.line) for f in findings] == [("RS005", 5)]
+
+
+def test_rs005_device_loops_ok(tmp_path):
+    # O(P) / O(P^2) loops over devices and ring steps are explicitly fine
+    findings, _ = lint_snippet(tmp_path, "src/repro/core/x.py", """\
+        def build_device_plan(a, b, nparts):
+            scheds = []
+            for src in range(nparts):
+                for dst in range(nparts):
+                    scheds.append((src, dst))
+            sizes = [p.ntiles for p in scheds]
+            return scheds, sizes
+    """)
+    assert findings == []
+
+
+def test_rs005_unregistered_function_ok(tmp_path):
+    # the registry is the contract: cold paths may loop
+    findings, _ = lint_snippet(tmp_path, "src/repro/core/x.py", """\
+        def debug_dump(a):
+            return [r for r in a.indices]
+    """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RS006 — interpret literals
+# ---------------------------------------------------------------------------
+
+BAD_RS006 = """\
+    def make_step(cfg, interpret=True):
+        return kernel(cfg, interpret=False)
+"""
+
+
+def test_rs006_bad(tmp_path):
+    findings, _ = lint_snippet(tmp_path, "src/repro/launch/x.py", BAD_RS006)
+    assert [(f.rule, f.line) for f in findings] == \
+        [("RS006", 1), ("RS006", 2)]
+
+
+def test_rs006_tests_allowlisted(tmp_path):
+    findings, _ = lint_snippet(tmp_path, "tests/test_x.py", BAD_RS006)
+    assert findings == []
+
+
+def test_rs006_good(tmp_path):
+    findings, _ = lint_snippet(tmp_path, "src/repro/launch/x.py", """\
+        def make_step(cfg, interpret=None):
+            return kernel(cfg, interpret=interpret)
+    """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RS007 — hypothesis import
+# ---------------------------------------------------------------------------
+
+def test_rs007_bad_everywhere(tmp_path):
+    for path in ("tests/test_x.py", "src/repro/core/x.py"):
+        findings, _ = lint_snippet(
+            tmp_path, path,
+            "import hypothesis\nfrom hypothesis import given\n")
+        assert [(f.rule, f.line) for f in findings] == \
+            [("RS007", 1), ("RS007", 2)], path
+
+
+def test_rs007_good_propcheck(tmp_path):
+    findings, _ = lint_snippet(
+        tmp_path, "tests/test_x.py",
+        "from _propcheck import given, integers\n")
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# suppression semantics
+# ---------------------------------------------------------------------------
+
+def test_suppression_with_reason(tmp_path):
+    findings, suppressed = lint_snippet(
+        tmp_path, "src/repro/core/spgemm_9d_device.py", """\
+        import numpy as np
+
+        def pack(n, dtype):
+            return np.zeros(  # replint: off=RS003 metadata-only placeholder
+                (n, 1, 1), dtype=dtype)
+    """)
+    assert findings == []
+    assert suppressed == 1
+
+
+def test_bare_suppression_is_a_finding(tmp_path):
+    findings, suppressed = lint_snippet(
+        tmp_path, "src/repro/core/spgemm_9d_device.py", """\
+        import numpy as np
+
+        def pack(n, dtype):
+            return np.zeros((n, 1, 1), dtype=dtype)  # replint: off=RS003
+    """)
+    assert suppressed == 0
+    assert [(f.rule, f.line) for f in findings] == [("RS000", 4)]
+    assert "no justification" in findings[0].message
+
+
+def test_suppression_wrong_id_does_not_silence(tmp_path):
+    findings, suppressed = lint_snippet(
+        tmp_path, "src/repro/core/spgemm_9d_device.py", """\
+        import numpy as np
+
+        def pack(n, dtype):
+            return np.zeros((n, 1, 1), dtype=dtype)  # replint: off=RS006 x
+    """)
+    assert suppressed == 0
+    assert rules_hit(findings) == ["RS003"]
+
+
+def test_suppression_multiple_ids(tmp_path):
+    findings, suppressed = lint_snippet(
+        tmp_path, "src/repro/launch/x.py",
+        "step = make(interpret=True)"
+        "  # replint: off=RS005,RS006 pinned for the lowering artifact\n")
+    assert findings == []
+    assert suppressed == 1
+
+
+def test_suppression_only_covers_its_line(tmp_path):
+    findings, _ = lint_snippet(tmp_path, "src/repro/launch/x.py", """\
+        a = make(interpret=True)  # replint: off=RS006 artifact pin
+        b = make(interpret=True)
+    """)
+    assert [(f.rule, f.line) for f in findings] == [("RS006", 2)]
+
+
+def test_parse_error_is_reported(tmp_path):
+    findings, _ = lint_snippet(
+        tmp_path, "src/repro/core/x.py", "def broken(:\n")
+    assert rules_hit(findings) == ["RS999"]
+
+
+# ---------------------------------------------------------------------------
+# CLI (JSON output, exit codes)
+# ---------------------------------------------------------------------------
+
+def _run_cli(args, cwd):
+    return subprocess.run(
+        [sys.executable, "-m", "tools.replint", *args],
+        cwd=cwd, capture_output=True, text=True,
+        env={"PATH": "/usr/bin:/bin", "PYTHONPATH": str(REPO_ROOT)})
+
+
+def test_cli_json_on_violation(tmp_path):
+    bad = tmp_path / "src/repro/apps/evil.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text(textwrap.dedent(BAD_RS004))
+    (tmp_path / "tools").symlink_to(REPO_ROOT / "tools")
+    res = _run_cli(["--format", "json", "src"], cwd=tmp_path)
+    assert res.returncode == 1, res.stderr
+    payload = json.loads(res.stdout)
+    assert payload["ok"] is False
+    assert {f["rule"] for f in payload["findings"]} == {"RS004"}
+    assert payload["findings"][0]["path"] == "src/repro/apps/evil.py"
+
+
+def test_cli_missing_path_is_usage_error(tmp_path):
+    (tmp_path / "tools").symlink_to(REPO_ROOT / "tools")
+    res = _run_cli(["no/such/dir"], cwd=tmp_path)
+    assert res.returncode == 2
+    assert "no such path" in res.stderr
+
+
+def test_cli_list_rules():
+    res = _run_cli(["--list-rules"], cwd=REPO_ROOT)
+    assert res.returncode == 0
+    for rid in RULE_IDS:
+        assert rid in res.stdout
+
+
+# ---------------------------------------------------------------------------
+# tier-1 self-lint + seeded regressions
+# ---------------------------------------------------------------------------
+
+def test_full_tree_self_lint():
+    findings, n_files, _ = lint_paths(
+        [REPO_ROOT / "src", REPO_ROOT / "tests", REPO_ROOT / "benchmarks"],
+        root=REPO_ROOT)
+    assert n_files > 100  # the real tree, not an accidental empty glob
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+SEEDED_REGRESSIONS = [
+    ("src/repro/core/bad_ring.py", "RS001", """\
+        from jax.experimental import pallas as pl
+
+        def fused(body, shape):
+            return pl.pallas_call(body, out_shape=shape)
+    """),
+    ("src/repro/core/spgemm_bad_device.py", "RS003", """\
+        import numpy as np
+
+        def pack(D, nc_max, bs):
+            return np.full((D, nc_max, bs, bs), 0.0, dtype=np.float32)
+    """),
+    ("src/repro/apps/bad_app.py", "RS004", """\
+        from repro.core.spgemm_1d_device import build_device_plan
+
+        def scores(a):
+            return build_device_plan(a, a, nparts=4, bs=64)
+    """),
+]
+
+
+@pytest.mark.parametrize("relpath,rule_id,source", SEEDED_REGRESSIONS,
+                         ids=[r[1] for r in SEEDED_REGRESSIONS])
+def test_seeded_regression_is_caught(tmp_path, relpath, rule_id, source):
+    findings, _ = lint_snippet(tmp_path, relpath, source)
+    assert rule_id in rules_hit(findings), \
+        f"seeded {rule_id} regression at {relpath} was not caught"

@@ -1,0 +1,2 @@
+"""Repo tooling namespace — makes ``python -m tools.replint`` runnable
+from the repository root (the shell entry points live next to this file)."""

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Invariant lint — replint over everything tier-1 covers.
+#
+#   tools/lint.sh                      # src tests benchmarks
+#   tools/lint.sh --format json src    # extra replint args pass through
+#
+# Exits nonzero on any finding; see tools/replint/README.md for the rule
+# list and the suppression syntax.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+exec python -m tools.replint "$@"

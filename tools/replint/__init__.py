@@ -1,0 +1,22 @@
+"""replint — AST-based enforcement of this repo's standing invariants.
+
+The ROADMAP's "Standing policies & invariants" are contracts the compiler
+cannot check: a literal ``0.0`` is silently wrong under min-plus, a raw
+``pl.pallas_call`` forks the interpret policy, an app bypassing
+``SpGEMMSession`` loses plan amortization. replint makes each one a
+mechanical, per-line check that fails tier-1 (``tools/verify.sh`` runs it
+before pytest).
+
+Public API (the tests drive it in-process)::
+
+    from tools.replint import lint_paths, lint_source, all_rules
+
+CLI: ``python -m tools.replint [paths...]`` — see ``cli.py`` / README.md.
+"""
+
+from .core import (Finding, Rule, all_rules, lint_paths, lint_source,
+                   rule)
+from .report import render_json, render_rules, render_text
+
+__all__ = ["Finding", "Rule", "all_rules", "lint_paths", "lint_source",
+           "rule", "render_json", "render_rules", "render_text"]

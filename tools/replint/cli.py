@@ -1,0 +1,62 @@
+"""replint CLI.
+
+    python -m tools.replint src tests benchmarks
+    python -m tools.replint --format json src
+    python -m tools.replint --list-rules
+
+Exit status: 0 = clean, 1 = findings, 2 = bad invocation. Paths may be
+files or directories; directories are walked for ``*.py``. ``--root``
+anchors the relative paths findings (and scope/allowlist globs) are
+matched against — it defaults to the cwd, which for the shipped entry
+points (``tools/lint.sh`` / ``tools/verify.sh``) is the repo root.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import Optional, Sequence
+
+from .core import all_rules, lint_paths
+from .report import render_json, render_rules, render_text
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.replint",
+        description="AST-based linter for this repo's standing invariants")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files or directories (default: src tests "
+                         "benchmarks)")
+    ap.add_argument("--root", default=None,
+                    help="directory scope globs and reported paths are "
+                         "relative to (default: cwd)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule registry and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(render_rules(all_rules()))
+        return 0
+
+    root = Path(args.root) if args.root else Path.cwd()
+    if not root.is_dir():
+        print(f"replint: --root {root} is not a directory", file=sys.stderr)
+        return 2
+    missing = [p for p in args.paths
+               if not (Path(p) if Path(p).is_absolute()
+                       else root / p).exists()]
+    if missing:
+        print(f"replint: no such path(s): {', '.join(missing)}",
+              file=sys.stderr)
+        return 2
+
+    findings, n_files, n_suppressed = lint_paths(
+        [Path(p) for p in args.paths], root=root)
+    render = render_json if args.format == "json" else render_text
+    print(render(findings, n_files, n_suppressed))
+    return 1 if findings else 0

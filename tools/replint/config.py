@@ -1,0 +1,110 @@
+"""replint configuration — the repo-specific scopes, allowlists and
+registries the rules consume.
+
+Paths are repo-root-relative POSIX globs, matched with ``fnmatch`` against
+the path of each linted file (relative to ``--root``, default cwd). Two
+kinds of path sets exist:
+
+  * ``*_SCOPE``  — the rule ONLY runs on matching files (everything else
+    is silently out of scope);
+  * ``*_ALLOW``  — the rule runs everywhere EXCEPT matching files (the
+    sanctioned home of the pattern it polices).
+
+Keeping this in one module means a new engine/app/test directory is a
+one-line config change, not a rule rewrite.
+"""
+
+from __future__ import annotations
+
+# ---------------------------------------------------------------------------
+# RS001 — raw pl.pallas_call: only the unified launcher may spell it
+# ---------------------------------------------------------------------------
+RS001_ALLOW = ("src/repro/kernels/launch.py",)
+
+# ---------------------------------------------------------------------------
+# RS002 — drifting JAX API names resolve in compat.py, nowhere else
+# ---------------------------------------------------------------------------
+RS002_ALLOW = ("src/repro/compat.py",)
+
+# Names that have moved between supported JAX releases. Importing them
+# from a ``jax*`` module, or spelling them as an attribute, couples a call
+# site to one release.
+DRIFTING_JAX_IMPORTS = frozenset({
+    "shard_map", "TPUCompilerParams", "CompilerParams",
+})
+DRIFTING_JAX_ATTRS = frozenset({"TPUCompilerParams", "CompilerParams"})
+
+# The compat shims themselves: redefining one outside compat.py forks the
+# single drift point.
+COMPAT_SHIM_NAMES = frozenset({
+    "shard_map", "tpu_compiler_params", "cpu_device_mesh",
+})
+
+# ---------------------------------------------------------------------------
+# RS003 — semiring identity: device-engine modules must not zero-fill
+# ---------------------------------------------------------------------------
+RS003_SCOPE = (
+    "src/repro/core/*_device.py",
+    "src/repro/core/device_common.py",
+    "src/repro/kernels/bsr_spgemm/*.py",
+)
+
+# dtype spellings that mark an array as index/flag metadata, where a
+# literal zero is a coordinate, not an additive identity.
+INTEGRAL_DTYPE_NAMES = frozenset({
+    "bool", "bool_", "int8", "int16", "int32", "int64", "intp", "int_",
+    "uint8", "uint16", "uint32", "uint64", "integer",
+})
+
+ZEROS_CALLEES = frozenset({"zeros", "zeros_like"})
+FULL_CALLEES = frozenset({"full", "full_like"})
+
+# ---------------------------------------------------------------------------
+# RS004 — the app/serve layer multiplies through SpGEMMSession only
+# ---------------------------------------------------------------------------
+RS004_SCOPE = (
+    "src/repro/apps/*.py",
+    "src/repro/serve/*.py",
+    "src/repro/launch/serve.py",
+)
+
+SESSION_ONLY_NAMES = frozenset({
+    "build_device_plan", "build_summa_plan", "build_summa3d_plan",
+    "compile_ring", "compile_summa", "compile_summa3d",
+})
+
+# ---------------------------------------------------------------------------
+# RS005 — vectorized-planner registry: these hot functions must not fall
+# back to Python loops over nnz/tile-sized iterables (O(P)/O(P²) loops
+# over devices or ring steps with vectorized bodies are fine and common).
+# ---------------------------------------------------------------------------
+PLANNER_HOT_FUNCTIONS = frozenset({
+    # 1D ring planning / decode (core/spgemm_1d_device.py)
+    "payload_need_maps", "build_device_plan", "repack_ring_payloads",
+    "decode_ring_output",
+    # 2D/3D planning / decode (core/spgemm_2d_device.py, _3d_device.py)
+    "build_summa_plan", "repack_summa_payloads", "decode_summa_output",
+    # shared packing/decode (core/device_common.py)
+    "pack_schedules", "decode_tiles",
+    # blockize + symbolic schedule (core/blocksparse.py)
+    "from_csc", "build_schedule",
+})
+
+# Attributes whose length is O(nnz) or O(ntiles): iterating one of these
+# in Python inside a hot function is the exact regression PR 2 removed.
+NNZ_SIZED_ATTRS = frozenset({
+    "indices", "indptr", "data", "tile_rows", "tile_cols", "nzc_ids",
+})
+
+# Name suffixes that mark a zip() operand as an nnz-sized coordinate
+# array (the ``zip(rows, cols)`` idiom).
+NNZ_SIZED_NAME_SUFFIXES = ("rows", "cols", "vals", "slots", "indices")
+
+# ---------------------------------------------------------------------------
+# RS006 — interpret literals: tests may pin, product code must auto
+# ---------------------------------------------------------------------------
+RS006_ALLOW = ("tests/*.py", "tests/**/*.py")
+
+# ---------------------------------------------------------------------------
+# RS007 — hypothesis is uninstallable here; no allowlist at all
+# ---------------------------------------------------------------------------

@@ -1,0 +1,223 @@
+"""replint core — findings, suppressions, the rule registry and the driver.
+
+A *rule* is a class with a ``RULE_ID``, a one-line ``TITLE``, optional
+``SCOPE``/``ALLOW`` path-glob tuples (see ``config.py`` for the semantics)
+and a ``check(ctx)`` generator yielding :class:`Finding`s. Rules register
+themselves with the :func:`rule` decorator; the driver (:func:`lint_paths`)
+walks files, parses each once, runs every in-scope rule, and filters
+findings through per-line suppression comments:
+
+    stack[j] = tiles          # replint: off=RS003 metadata-only payload
+
+Suppression grammar: ``# replint: off=RSxxx[,RSyyy...] <justification>``.
+The justification is mandatory — a bare suppression is itself reported
+(RS000), so every exception to an invariant carries its reason in-line.
+A suppression silences only findings anchored to its own physical line.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import re
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+__all__ = ["Finding", "FileContext", "Rule", "rule", "all_rules",
+           "lint_paths", "lint_source", "iter_python_files",
+           "SUPPRESS_RE", "BARE_SUPPRESSION_ID", "PARSE_ERROR_ID"]
+
+BARE_SUPPRESSION_ID = "RS000"
+PARSE_ERROR_ID = "RS999"
+
+SUPPRESS_RE = re.compile(
+    r"#\s*replint:\s*off=(?P<ids>RS\d{3}(?:\s*,\s*RS\d{3})*)"
+    r"(?:\s+(?P<reason>\S.*?))?\s*$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One invariant violation, anchored to a file position."""
+
+    rule: str
+    path: str          # POSIX path relative to the lint root
+    line: int          # 1-indexed
+    col: int           # 0-indexed (ast convention)
+    message: str
+
+    def sort_key(self):
+        return (self.path, self.line, self.col, self.rule)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: " \
+               f"{self.rule} {self.message}"
+
+
+@dataclasses.dataclass
+class FileContext:
+    """Everything a rule needs about one parsed file."""
+
+    path: str                 # relative POSIX path
+    source: str
+    tree: ast.AST
+    # line -> (rule ids suppressed on that line, justification text)
+    suppressions: Dict[int, Tuple[frozenset, str]]
+
+    def finding(self, rule_id: str, node: ast.AST, message: str) -> Finding:
+        return Finding(rule=rule_id, path=self.path,
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0),
+                       message=message)
+
+
+class Rule:
+    """Base class; subclasses set RULE_ID/TITLE and implement check()."""
+
+    RULE_ID: str = ""
+    TITLE: str = ""
+    SCOPE: Sequence[str] = ()   # non-empty: run ONLY on matching paths
+    ALLOW: Sequence[str] = ()   # matching paths are exempt
+
+    def applies_to(self, path: str) -> bool:
+        if self.SCOPE and not _match_any(path, self.SCOPE):
+            return False
+        if self.ALLOW and _match_any(path, self.ALLOW):
+            return False
+        return True
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        raise NotImplementedError
+
+
+_REGISTRY: List[Rule] = []
+
+
+def rule(cls):
+    """Class decorator: instantiate and register a rule."""
+    assert cls.RULE_ID and cls.TITLE, cls
+    assert not any(r.RULE_ID == cls.RULE_ID for r in _REGISTRY), cls.RULE_ID
+    _REGISTRY.append(cls())
+    return cls
+
+
+def all_rules() -> List[Rule]:
+    # import for the registration side effect; cycle-safe because rules.py
+    # imports only core symbols defined above
+    from . import rules  # noqa: F401
+    return list(_REGISTRY)
+
+
+def _match_any(path: str, globs: Sequence[str]) -> bool:
+    return any(fnmatch.fnmatch(path, g) for g in globs)
+
+
+# ---------------------------------------------------------------------------
+# suppression comments
+# ---------------------------------------------------------------------------
+
+def parse_suppressions(source: str) -> Dict[int, Tuple[frozenset, str]]:
+    out: Dict[int, Tuple[frozenset, str]] = {}
+    for lineno, text in enumerate(source.splitlines(), start=1):
+        m = SUPPRESS_RE.search(text)
+        if m:
+            ids = frozenset(s.strip() for s in m.group("ids").split(","))
+            out[lineno] = (ids, (m.group("reason") or "").strip())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def iter_python_files(paths: Sequence[Path], root: Path) -> Iterator[Path]:
+    """Expand files/directories into a sorted, de-duplicated .py file list.
+
+    Hidden directories and ``__pycache__`` are skipped; paths outside
+    ``root`` are accepted but reported with their absolute path.
+    """
+    seen = set()
+    for p in paths:
+        p = Path(p)
+        if not p.is_absolute():
+            p = root / p
+        files = [p] if p.is_file() else sorted(p.rglob("*.py"))
+        for f in files:
+            if f.suffix != ".py":
+                continue
+            if any(part == "__pycache__" or part.startswith(".")
+                   for part in f.parts):
+                continue
+            if f not in seen:
+                seen.add(f)
+                yield f
+
+
+def _relpath(f: Path, root: Path) -> str:
+    try:
+        return f.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        return f.as_posix()
+
+
+def lint_source(source: str, path: str,
+                rules: Optional[Sequence[Rule]] = None
+                ) -> Tuple[List[Finding], int]:
+    """Lint one in-memory file; returns (findings, n_suppressed)."""
+    rules = all_rules() if rules is None else rules
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(PARSE_ERROR_ID, path, e.lineno or 1,
+                        (e.offset or 1) - 1,
+                        f"file does not parse: {e.msg}")], 0
+
+    ctx = FileContext(path=path, source=source, tree=tree,
+                      suppressions=parse_suppressions(source))
+    findings: List[Finding] = []
+    suppressed = 0
+    for r in rules:
+        if not r.applies_to(path):
+            continue
+        for f in r.check(ctx):
+            ids, reason = ctx.suppressions.get(f.line, (frozenset(), ""))
+            if f.rule in ids:
+                if reason:
+                    suppressed += 1
+                    continue
+                findings.append(Finding(
+                    BARE_SUPPRESSION_ID, path, f.line, f.col,
+                    f"suppression of {f.rule} has no justification "
+                    f"(write `# replint: off={f.rule} <reason>`); "
+                    f"suppressed finding: {f.message}"))
+            else:
+                findings.append(f)
+    return findings, suppressed
+
+
+def lint_paths(paths: Sequence[Path], root: Optional[Path] = None,
+               rules: Optional[Sequence[Rule]] = None
+               ) -> Tuple[List[Finding], int, int]:
+    """Lint files/trees; returns (findings, n_files, n_suppressed)."""
+    root = Path.cwd() if root is None else Path(root)
+    rules = all_rules() if rules is None else rules
+    findings: List[Finding] = []
+    n_files = 0
+    n_suppressed = 0
+    for f in iter_python_files(paths, root):
+        n_files += 1
+        rel = _relpath(f, root)
+        try:
+            source = f.read_text(encoding="utf-8")
+        except (OSError, UnicodeDecodeError) as e:
+            findings.append(Finding(PARSE_ERROR_ID, rel, 1, 0,
+                                    f"unreadable: {e}"))
+            continue
+        got, sup = lint_source(source, rel, rules)
+        findings.extend(got)
+        n_suppressed += sup
+    findings.sort(key=Finding.sort_key)
+    return findings, n_files, n_suppressed

@@ -1,0 +1,37 @@
+"""Finding reporters — text for humans/CI logs, JSON for tooling."""
+
+from __future__ import annotations
+
+import json
+from typing import List, Sequence
+
+from .core import Finding, Rule
+
+
+def render_text(findings: Sequence[Finding], n_files: int,
+                n_suppressed: int) -> str:
+    lines: List[str] = [f.render() for f in findings]
+    summary = (f"replint: {len(findings)} finding"
+               f"{'' if len(findings) == 1 else 's'} in {n_files} files"
+               + (f" ({n_suppressed} suppressed)" if n_suppressed else ""))
+    lines.append(summary)
+    return "\n".join(lines)
+
+
+def render_json(findings: Sequence[Finding], n_files: int,
+                n_suppressed: int) -> str:
+    return json.dumps({
+        "findings": [f.to_dict() for f in findings],
+        "files_checked": n_files,
+        "suppressed": n_suppressed,
+        "ok": not findings,
+    }, indent=2)
+
+
+def render_rules(rules: Sequence[Rule]) -> str:
+    lines = []
+    for r in sorted(rules, key=lambda r: r.RULE_ID):
+        scope = f" [scope: {', '.join(r.SCOPE)}]" if r.SCOPE else ""
+        allow = f" [exempt: {', '.join(r.ALLOW)}]" if r.ALLOW else ""
+        lines.append(f"{r.RULE_ID}  {r.TITLE}{scope}{allow}")
+    return "\n".join(lines)

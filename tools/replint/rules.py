@@ -1,0 +1,353 @@
+"""The standing-invariant rules (RS001–RS007).
+
+Each rule encodes one ROADMAP "Standing policies & invariants" bullet as a
+purely syntactic check over a file's AST — no imports are executed, so the
+linter runs anywhere (including environments where jax itself is absent).
+Rule IDs are stable: suppressions, ROADMAP annotations and the test
+fixtures all refer to them.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Iterator, Optional
+
+from . import config
+from .core import FileContext, Finding, Rule, rule
+
+# ---------------------------------------------------------------------------
+# small AST helpers
+# ---------------------------------------------------------------------------
+
+
+def _terminal_name(node: ast.AST) -> Optional[str]:
+    """`np.zeros` -> "zeros", `zeros` -> "zeros", anything else -> None."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _is_zero_literal(node: ast.AST) -> bool:
+    """Literal numeric zero: 0, 0.0, -0.0 (NOT False — bools are flags)."""
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, (ast.USub,
+                                                              ast.UAdd)):
+        node = node.operand
+    return (isinstance(node, ast.Constant)
+            and not isinstance(node.value, bool)
+            and isinstance(node.value, (int, float))
+            and node.value == 0)
+
+
+def _is_bool_literal(node: ast.AST) -> bool:
+    return isinstance(node, ast.Constant) and isinstance(node.value, bool)
+
+
+def _funcdefs(tree: ast.AST) -> Iterator[ast.AST]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+# ---------------------------------------------------------------------------
+# RS001 — raw pallas_call outside the unified launcher
+# ---------------------------------------------------------------------------
+
+
+@rule
+class RawPallasCall(Rule):
+    RULE_ID = "RS001"
+    TITLE = "raw pl.pallas_call outside kernels/launch.py"
+    ALLOW = config.RS001_ALLOW
+
+    _MSG = ("raw `pallas_call` — kernels launch through "
+            "`repro.kernels.launch.launch(...)` (single interpret/compiler-"
+            "params policy point)")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Attribute) and \
+                    node.attr == "pallas_call":
+                yield ctx.finding(self.RULE_ID, node, self._MSG)
+            elif isinstance(node, ast.ImportFrom) and node.module and \
+                    "pallas" in node.module:
+                for alias in node.names:
+                    if alias.name == "pallas_call":
+                        yield ctx.finding(self.RULE_ID, node, self._MSG)
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Name) and \
+                    node.func.id == "pallas_call":
+                yield ctx.finding(self.RULE_ID, node, self._MSG)
+
+
+# ---------------------------------------------------------------------------
+# RS002 — drifting JAX API names outside compat.py
+# ---------------------------------------------------------------------------
+
+
+@rule
+class DriftingJaxName(Rule):
+    RULE_ID = "RS002"
+    TITLE = "drifting JAX API name spelled outside compat.py"
+    ALLOW = config.RS002_ALLOW
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom):
+                if node.level == 0 and node.module and (
+                        node.module == "jax"
+                        or node.module.startswith("jax.")):
+                    for alias in node.names:
+                        if alias.name in config.DRIFTING_JAX_IMPORTS:
+                            yield ctx.finding(
+                                self.RULE_ID, node,
+                                f"`from {node.module} import {alias.name}` "
+                                f"— import the shim from `repro.compat` "
+                                f"instead (drift resolves once, there)")
+            elif isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.startswith("jax.experimental.shard_map"):
+                        yield ctx.finding(
+                            self.RULE_ID, node,
+                            f"`import {alias.name}` — use "
+                            f"`repro.compat.shard_map`")
+            elif isinstance(node, ast.Attribute):
+                if node.attr in config.DRIFTING_JAX_ATTRS:
+                    yield ctx.finding(
+                        self.RULE_ID, node,
+                        f"`.{node.attr}` spells a version-specific Pallas-"
+                        f"TPU params class — build it via "
+                        f"`repro.compat.tpu_compiler_params(...)`")
+                elif node.attr == "shard_map" and \
+                        isinstance(node.value, ast.Name) and \
+                        node.value.id == "jax":
+                    yield ctx.finding(
+                        self.RULE_ID, node,
+                        "`jax.shard_map` — use `repro.compat.shard_map`")
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if node.name in config.COMPAT_SHIM_NAMES:
+                    yield ctx.finding(
+                        self.RULE_ID, node,
+                        f"redefinition of compat shim `{node.name}` — "
+                        f"compat.py is the single drift point")
+
+
+# ---------------------------------------------------------------------------
+# RS003 — literal zero as accumulator/fill/pad in device engines
+# ---------------------------------------------------------------------------
+
+
+@rule
+class LiteralZeroFill(Rule):
+    RULE_ID = "RS003"
+    TITLE = "literal 0/0.0 fill in a device-engine module"
+    SCOPE = config.RS003_SCOPE
+
+    _FIX = ("use `semiring.zero` / `semiring.fill(...)` — a literal zero "
+            "is the wrong identity for min-plus")
+
+    def _dtype_is_integral(self, call: ast.Call, pos: int) -> bool:
+        """True iff the call pins an integer/bool dtype (metadata array)."""
+        dtype = None
+        if len(call.args) > pos:
+            dtype = call.args[pos]
+        for kw in call.keywords:
+            if kw.arg == "dtype":
+                dtype = kw.value
+        name = _terminal_name(dtype) if dtype is not None else None
+        return name in config.INTEGRAL_DTYPE_NAMES
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                yield from self._check_call(ctx, node)
+            elif isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Subscript) and \
+                            isinstance(node.value, ast.Constant) and \
+                            isinstance(node.value.value, float) and \
+                            node.value.value == 0.0:
+                        yield ctx.finding(
+                            self.RULE_ID, node.value,
+                            f"storing literal 0.0 into an array — "
+                            f"{self._FIX}")
+
+    def _check_call(self, ctx: FileContext,
+                    call: ast.Call) -> Iterable[Finding]:
+        name = _terminal_name(call.func)
+        if name in config.ZEROS_CALLEES:
+            # zeros(shape, dtype)/zeros_like(x, dtype=...): a pinned
+            # integer/bool dtype marks index/flag metadata; everything
+            # else is a value-typed zero fill.
+            pos = 1 if name == "zeros" else 99
+            if not self._dtype_is_integral(call, pos):
+                yield ctx.finding(
+                    self.RULE_ID, call,
+                    f"`{name}` without an integer/bool dtype allocates a "
+                    f"value array of literal zeros — {self._FIX} (or pin "
+                    f"an integral dtype if this is index metadata)")
+        elif name in config.FULL_CALLEES:
+            fill = call.args[1] if len(call.args) > 1 else None
+            for kw in call.keywords:
+                if kw.arg == "fill_value":
+                    fill = kw.value
+            if fill is not None and _is_zero_literal(fill):
+                yield ctx.finding(
+                    self.RULE_ID, call,
+                    f"`{name}` with literal zero fill — {self._FIX}")
+        for kw in call.keywords:
+            if kw.arg == "constant_values" and _is_zero_literal(kw.value):
+                yield ctx.finding(
+                    self.RULE_ID, kw.value,
+                    f"pad with literal zero `constant_values` — "
+                    f"{self._FIX}")
+
+
+# ---------------------------------------------------------------------------
+# RS004 — apps/serve bypassing SpGEMMSession
+# ---------------------------------------------------------------------------
+
+
+@rule
+class SessionBypass(Rule):
+    RULE_ID = "RS004"
+    TITLE = "app/serve layer calls the planner/compiler directly"
+    SCOPE = config.RS004_SCOPE
+
+    def _msg(self, name: str) -> str:
+        return (f"`{name}` called from the app/serve layer — multiply "
+                f"through `core.session.SpGEMMSession` so plans and "
+                f"executables amortize across the workload")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom):
+                for alias in node.names:
+                    if alias.name in config.SESSION_ONLY_NAMES:
+                        yield ctx.finding(self.RULE_ID, node,
+                                          self._msg(alias.name))
+            elif isinstance(node, (ast.Name, ast.Attribute)):
+                name = _terminal_name(node)
+                if name in config.SESSION_ONLY_NAMES and \
+                        isinstance(getattr(node, "ctx", None), ast.Load):
+                    yield ctx.finding(self.RULE_ID, node, self._msg(name))
+
+
+# ---------------------------------------------------------------------------
+# RS005 — Python loops over nnz-sized iterables in planner hot functions
+# ---------------------------------------------------------------------------
+
+
+def _nnz_sized(expr: ast.AST) -> Optional[str]:
+    """Why ``expr`` looks nnz/tile-sized, or None if it doesn't."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and \
+                node.attr in config.NNZ_SIZED_ATTRS:
+            return f"`.{node.attr}` is nnz/tile-sized"
+        if isinstance(node, ast.Call):
+            cname = _terminal_name(node.func)
+            if cname == "nonzero":
+                return "`nonzero(...)` output is nnz-sized"
+            if cname == "zip":
+                for arg in node.args:
+                    aname = _terminal_name(arg)
+                    if aname and aname.endswith(
+                            tuple(config.NNZ_SIZED_NAME_SUFFIXES)):
+                        return f"`zip(... {aname} ...)` pairs nnz-sized " \
+                               f"coordinate arrays"
+    return None
+
+
+@rule
+class PlannerPythonLoop(Rule):
+    RULE_ID = "RS005"
+    TITLE = "per-nonzero Python loop in a registered planner hot function"
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for fn in _funcdefs(ctx.tree):
+            if fn.name not in config.PLANNER_HOT_FUNCTIONS:
+                continue
+            for node in ast.walk(fn):
+                iters = []
+                if isinstance(node, (ast.For, ast.AsyncFor)):
+                    iters = [node.iter]
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.DictComp, ast.GeneratorExp)):
+                    iters = [g.iter for g in node.generators]
+                for it in iters:
+                    why = _nnz_sized(it)
+                    if why:
+                        yield ctx.finding(
+                            self.RULE_ID, it,
+                            f"Python loop over an nnz-sized iterable in "
+                            f"hot function `{fn.name}` ({why}) — "
+                            f"vectorize with numpy (searchsorted/repeat/"
+                            f"reduceat), per the vectorized-planner "
+                            f"invariant")
+
+
+# ---------------------------------------------------------------------------
+# RS006 — literal interpret=True/False outside tests
+# ---------------------------------------------------------------------------
+
+
+@rule
+class InterpretLiteral(Rule):
+    RULE_ID = "RS006"
+    TITLE = "literal interpret=True/False outside tests"
+    ALLOW = config.RS006_ALLOW
+
+    _MSG = ("hard-coded `interpret={val}` — default to `None` so "
+            "`kernels.launch.resolve_interpret` picks interpret-off-TPU "
+            "automatically (a pinned True interprets on TPU; a pinned "
+            "False breaks every CPU run)")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg == "interpret" and _is_bool_literal(kw.value):
+                        yield ctx.finding(
+                            self.RULE_ID, kw.value,
+                            self._MSG.format(val=kw.value.value))
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = node.args
+                named = args.posonlyargs + args.args + args.kwonlyargs
+                defaults = ([None] * (len(args.posonlyargs) + len(args.args)
+                                      - len(args.defaults))
+                            + list(args.defaults) + list(args.kw_defaults))
+                for a, d in zip(named, defaults):
+                    if a.arg == "interpret" and d is not None and \
+                            _is_bool_literal(d):
+                        yield ctx.finding(
+                            self.RULE_ID, d,
+                            self._MSG.format(val=d.value))
+
+
+# ---------------------------------------------------------------------------
+# RS007 — hypothesis import (uninstallable; _propcheck is the stand-in)
+# ---------------------------------------------------------------------------
+
+
+@rule
+class HypothesisImport(Rule):
+    RULE_ID = "RS007"
+    TITLE = "hypothesis import (use tests/_propcheck.py)"
+
+    _MSG = ("`hypothesis` cannot be installed in this environment — "
+            "property tests use the vendored seeded harness "
+            "`tests/_propcheck.py`")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "hypothesis" or \
+                            alias.name.startswith("hypothesis."):
+                        yield ctx.finding(self.RULE_ID, node, self._MSG)
+            elif isinstance(node, ast.ImportFrom):
+                if node.level == 0 and node.module and (
+                        node.module == "hypothesis"
+                        or node.module.startswith("hypothesis.")):
+                    yield ctx.finding(self.RULE_ID, node, self._MSG)

@@ -1,8 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 verify — the one command for builder and CI.
 #
-#   tools/verify.sh            # full quiet suite
+#   tools/verify.sh            # invariant lint + full quiet suite
 #   tools/verify.sh -x -k moe  # extra pytest args pass through
+#
+# replint runs first: a standing-invariant violation (raw pallas_call,
+# literal semiring zero, session bypass, ...) fails tier-1 before pytest
+# spends a second — see tools/replint/README.md.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+tools/lint.sh
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -q "$@"
