@@ -1,0 +1,117 @@
+"""Fault-injection smoke — the hardened session under seeded stage faults.
+
+Every other benchmark measures the happy path; this one measures the
+ladder. A seeded :class:`repro.runtime.FaultInjector` fires simulated
+XLA/OOM/corruption failures at ~30% per stage (plan / compile / execute /
+repack) while session workloads run cold calls and values-only repacks
+for each device algorithm × semiring. The retry policy (injectable sleep,
+so no wall-clock backoff in CI) plus the engine→jnp and 3d→2d→1d
+downgrade rungs must absorb every fault:
+
+  * ``{algo}/{semiring}/match_oracle`` — 1.0 iff every surviving call
+    decoded bitwise-equal to the ``spgemm_1d`` host oracle (integer
+    operands make that exact). ``tools/bench_smoke.sh`` gates these.
+  * ``{algo}/{semiring}/faults_injected`` — what the injector actually
+    fired (gated > 0 overall, so the smoke can't silently disarm);
+  * ``{algo}/{semiring}/retries|fallbacks|quarantined`` — the session's
+    hardening counters; the gate bounds retries by faults injected.
+
+``python -m benchmarks.fault_injection --json [PATH]`` merges rows into
+``BENCH_paper_figs.json`` exactly like ``device_compare``.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import BOOL_OR_AND, MIN_PLUS, PLUS_TIMES, SpGEMMSession
+from repro.core.sparse import CSC, banded_clustered, erdos_renyi
+from repro.core.spgemm_1d import spgemm_1d
+from repro.runtime import FaultInjector
+from repro.runtime.fault_tolerance import RetryPolicy
+
+from .common import Csv
+from .device_compare import DEFAULT_JSON, geometry, intify, merge_json
+
+FAULT_RATE = 0.3
+CALLS_PER_CASE = 4
+SEMIRINGS = (PLUS_TIMES, BOOL_OR_AND, MIN_PLUS)
+
+
+def _oracle(a: CSC, b: CSC, semiring) -> CSC:
+    c = spgemm_1d(a, b, 1, semiring=semiring).concat()
+    if semiring.name == "plus_times":
+        c = c.prune(0.0)          # device engines drop numerical zeros
+    return c
+
+
+def _bitwise(c: CSC, ref: CSC) -> float:
+    return float(np.array_equal(c.indptr, ref.indptr)
+                 and np.array_equal(c.indices, ref.indices)
+                 and np.array_equal(c.data, ref.data.astype(np.float32)))
+
+
+def main(scale: int = 1) -> Csv:
+    csv = Csv("fault_injection")
+    ndev, nparts, grid, layers = geometry()
+    csv.add("geometry/devices", ndev,
+            f"P={nparts} grid={grid} layers={layers}")
+    csv.add("config/fault_rate", FAULT_RATE, "per stage, seeded")
+
+    n = 96 * scale
+    a = intify(banded_clustered(n, max(n // 12, 8), 4.0, seed=31))
+    b = intify(erdos_renyi(n, n, 3.0, seed=32))
+    # a values-jittered twin with a's structure: the repack workload
+    a_jit = a.astype(np.float64)
+    a_jit.data[:] = a.data + 2.0
+
+    bs = 16
+    for aidx, (algo, kw) in enumerate((("1d", dict(nparts=nparts)),
+                                       ("2d", dict(grid=grid)),
+                                       ("3d", dict(grid=grid,
+                                                   layers=layers)))):
+        for sidx, semiring in enumerate(SEMIRINGS):
+            inj = FaultInjector(seed=1000 + 100 * aidx + 10 * sidx,
+                                rates=FAULT_RATE)
+            session = SpGEMMSession(
+                fault_injector=inj,
+                retry_policy=RetryPolicy(max_retries=4, backoff_s=0.01,
+                                         jitter=0.5),
+                retry_sleep=lambda _: None,       # no wall-clock backoff
+                retry_rng=np.random.default_rng(0))
+            ok = 1.0
+            for call in range(CALLS_PER_CASE):
+                lhs = a if call % 2 == 0 else a_jit   # flip => repack stage
+                c = session.matmul(lhs, b, algorithm=algo, bs=bs,
+                                   semiring=semiring, **kw)
+                ok = min(ok, _bitwise(c, _oracle(lhs, b, semiring)))
+            tag = f"{algo}/{semiring.name}"
+            csv.add(f"{tag}/match_oracle", ok,
+                    "decoded-under-faults vs host oracle, bitwise")
+            csv.add(f"{tag}/faults_injected", inj.total_injected)
+            csv.add(f"{tag}/retries", session.stats["retries"])
+            csv.add(f"{tag}/fallbacks", session.stats["fallbacks"])
+            csv.add(f"{tag}/quarantined", session.stats["quarantined"])
+            csv.add(f"{tag}/served_algorithm_degraded",
+                    float(session.last_call.get("degraded", False)),
+                    f"last call served by {session.last_call['algorithm']}"
+                    f"/{session.last_call['engine']}")
+    return csv
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
+                    metavar="PATH",
+                    help="merge rows into PATH (replacing previous "
+                         f"fault_injection rows; default {DEFAULT_JSON})")
+    args = ap.parse_args()
+    out_csv = main(scale=args.scale)
+    out_csv.emit()
+    if args.json is not None:
+        merge_json(out_csv, args.json, args.scale)
+        print(f"# merged {len(out_csv.entries)} fault_injection rows "
+              f"into {args.json}")

@@ -17,17 +17,17 @@ import sys
 import time
 import traceback
 
-from . import (cv_mema, device_compare, device_ring, fig04_permutation,
-               fig05_comm_volume, fig06_block_fetch, fig07_config_sweep,
-               fig08_breakdown, fig09_strong_scaling, fig10_rta,
-               fig12_outer_product, fig13_bc, moe_dispatch,
+from . import (cv_mema, device_compare, device_ring, fault_injection,
+               fig04_permutation, fig05_comm_volume, fig06_block_fetch,
+               fig07_config_sweep, fig08_breakdown, fig09_strong_scaling,
+               fig10_rta, fig12_outer_product, fig13_bc, moe_dispatch,
                session_amortization)
 
 MODULES = [
     fig04_permutation, fig05_comm_volume, fig06_block_fetch,
     fig07_config_sweep, fig08_breakdown, fig09_strong_scaling,
     fig10_rta, fig12_outer_product, fig13_bc, cv_mema, moe_dispatch,
-    device_ring, device_compare, session_amortization,
+    device_ring, device_compare, session_amortization, fault_injection,
 ]
 
 DEFAULT_JSON = "BENCH_paper_figs.json"

@@ -60,7 +60,8 @@ class BCResult:
 
 def bc_batch(a: CSC, sources: np.ndarray,
              spgemm_fn: Optional[Callable] = None,
-             fwd_semiring: Semiring = PLUS_TIMES) -> BCResult:
+             fwd_semiring: Semiring = PLUS_TIMES,
+             checkpoint_dir: Optional[str] = None) -> BCResult:
     """One batch of multi-source Brandes on graph ``a`` (n×n, unweighted).
 
     sources: (b,) vertex ids. ``spgemm_fn(A, B, semiring) -> (CSC, bytes)``
@@ -73,6 +74,12 @@ def bc_batch(a: CSC, sources: np.ndarray,
     pure reachability BFS (σ degenerates to 0/1 — the approximate-BC
     variant). The backward sweep tallies real-valued dependencies and is
     inherently plus-times.
+
+    ``checkpoint_dir`` makes the batch resumable: each completed level
+    (forward expansion or backward tally) snapshots the host state —
+    levels, σ, visited, δ, phase — atomically; a re-call with the same
+    directory after an aborting fault resumes mid-sweep and produces the
+    bitwise-identical scores.
     """
     n = a.nrows
     b = len(sources)
@@ -90,23 +97,59 @@ def bc_batch(a: CSC, sources: np.ndarray,
     levels: List[CSC] = [frontier]
     comm = 0
     fwd_calls = 0
-    while frontier.nnz:
-        nxt, bytes_ = spgemm_fn(at, frontier, fwd_semiring)
-        comm += bytes_
-        fwd_calls += 1
-        nxt = ew_mask_not(nxt, visited)            # drop already-visited
-        if nxt.nnz == 0:
-            break
-        rows, cols, vals = nxt.to_coo()
-        sigma_dense[rows, cols] += vals
-        visited[rows, cols] = True
-        frontier = nxt
-        levels.append(frontier)
-
-    # backward sweep over levels (deepest first)
     delta = np.zeros((n, b))
     bwd_calls = 0
-    for d in range(len(levels) - 1, 0, -1):
+    phase = 0                       # 0 = forward sweep, 1 = backward
+    d_next = -1                     # next backward level once phase == 1
+
+    ckpt = None
+    if checkpoint_dir is not None:
+        from ..runtime.resumable import (LoopCheckpointer, pack_csc_list,
+                                         unpack_csc_list)
+        ckpt = LoopCheckpointer(checkpoint_dir)
+        _, state = ckpt.resume()
+        if state is not None:
+            levels = unpack_csc_list("levels", state)
+            frontier = levels[-1]
+            sigma_dense = np.asarray(state["sigma"], dtype=np.float64)
+            visited = np.asarray(state["visited"], dtype=bool)
+            delta = np.asarray(state["delta"], dtype=np.float64)
+            comm = int(state["comm"])
+            fwd_calls = int(state["fwd_calls"])
+            bwd_calls = int(state["bwd_calls"])
+            phase = int(state["phase"])
+            d_next = int(state["d_next"])
+
+    def snapshot():
+        state = {"sigma": sigma_dense, "visited": visited, "delta": delta,
+                 "comm": np.asarray(comm, dtype=np.int64),
+                 "fwd_calls": np.asarray(fwd_calls, dtype=np.int64),
+                 "bwd_calls": np.asarray(bwd_calls, dtype=np.int64),
+                 "phase": np.asarray(phase, dtype=np.int64),
+                 "d_next": np.asarray(d_next, dtype=np.int64)}
+        pack_csc_list("levels", levels, state)
+        ckpt.maybe_save(fwd_calls + bwd_calls, state)
+
+    if phase == 0:
+        while frontier.nnz:
+            nxt, bytes_ = spgemm_fn(at, frontier, fwd_semiring)
+            comm += bytes_
+            fwd_calls += 1
+            nxt = ew_mask_not(nxt, visited)        # drop already-visited
+            if nxt.nnz == 0:
+                break
+            rows, cols, vals = nxt.to_coo()
+            sigma_dense[rows, cols] += vals
+            visited[rows, cols] = True
+            frontier = nxt
+            levels.append(frontier)
+            if ckpt is not None:
+                snapshot()
+        phase = 1
+        d_next = len(levels) - 1
+
+    # backward sweep over levels (deepest first)
+    for d in range(d_next, 0, -1):
         lv = levels[d]
         rows, cols, _ = lv.to_coo()
         # w = (1 + delta) / sigma on the level-d frontier
@@ -120,6 +163,9 @@ def bc_batch(a: CSC, sources: np.ndarray,
         prows, pcols, _ = prv.to_coo()
         cd = contrib.to_dense()
         delta[prows, pcols] += cd[prows, pcols] * sigma_dense[prows, pcols]
+        if ckpt is not None:
+            d_next = d - 1
+            snapshot()
 
     scores = delta.sum(axis=1)
     scores[sources] -= delta[sources, np.arange(b)]  # exclude s==v terms

@@ -121,7 +121,9 @@ def mcl(a: CSC,
         layers: int = 1,
         bs: int = 32,
         engine: str = "auto",
-        interpret: Optional[bool] = None) -> MCLResult:
+        interpret: Optional[bool] = None,
+        checkpoint_dir: Optional[str] = None,
+        checkpoint_every: int = 1) -> MCLResult:
     """Markov clustering of the graph ``a`` (n×n, nonnegative weights).
 
     Expansion (M ← M·M) runs on the device SpGEMM path through
@@ -131,6 +133,13 @@ def mcl(a: CSC,
     ``nparts`` / ``grid`` / ``layers`` / ``bs`` / ``engine`` forward to
     :meth:`SpGEMMSession.matmul`; the geometry must fit the visible device
     count.
+
+    ``checkpoint_dir`` makes the loop resumable: every
+    ``checkpoint_every`` completed iterations the host state (operator,
+    iteration count, comm tally, chaos) is snapshotted atomically; if a
+    fault escapes the session's ladder and aborts the run, re-calling
+    ``mcl`` with the same directory resumes at the last snapshot and
+    converges to the bitwise-identical result instead of restarting.
     """
     assert a.nrows == a.ncols, a.shape
     session = session_or_new(session, interpret)
@@ -139,8 +148,19 @@ def mcl(a: CSC,
     comm = 0
     it = 0
     ch = chaos(m)
+    ckpt = None
+    if checkpoint_dir is not None:
+        from ..runtime.resumable import (LoopCheckpointer, pack_csc,
+                                         unpack_csc)
+        ckpt = LoopCheckpointer(checkpoint_dir, every=checkpoint_every)
+        _, state = ckpt.resume()
+        if state is not None:
+            m = unpack_csc("m", state)
+            it = int(state["it"])
+            comm = int(state["comm"])
+            ch = float(state["chaos"])
     converged = ch < tol
-    while not converged and it < max_iter:
+    while not converged and it < max_iter and m.nnz:
         m2 = session.matmul(m, m, algorithm=algorithm, nparts=nparts,
                             grid=grid, layers=layers, bs=bs, engine=engine)
         comm += session.last_call["comm_bytes_planned"]
@@ -153,6 +173,12 @@ def mcl(a: CSC,
             break
         ch = chaos(m)
         converged = ch < tol
+        if ckpt is not None:
+            state = {"it": np.asarray(it, dtype=np.int64),
+                     "comm": np.asarray(comm, dtype=np.int64),
+                     "chaos": np.asarray(ch, dtype=np.float64)}
+            pack_csc("m", m, state)
+            ckpt.maybe_save(it, state)
 
     return MCLResult(clusters=clusters_from_matrix(m), matrix=m,
                      iterations=it, converged=converged or m.nnz == 0,

@@ -40,3 +40,6 @@ from .partition import (PartitionReport, degree_squared_weights, edge_cut,
                         multilevel_partition, partition_to_permutation,
                         random_permutation)
 from .session import SpGEMMSession, structure_fingerprint
+from .validate import (DeviceExecError, PlanError, SpGEMMError,
+                       ValidationError, validate_csc,
+                       validate_matmul_operands)

@@ -75,9 +75,18 @@ REQUIRED_STATS = ("comm_bytes_planned", "comm_bytes_padded", "messages",
 #   traces            : shard_map-body (re)traces observed via the
 #                       compile-count probe; constant across cache hits
 #   evictions         : LRU entries dropped at capacity
+#   retries           : per-stage attempts repeated after a retryable
+#                       failure (backoff handled by runtime.with_retries)
+#   fallbacks         : degradation-ladder descents — a rung failed and the
+#                       call moved to the next (engine pallas→jnp, then
+#                       algorithm 3d→2d→1d)
+#   quarantined       : cached entries dropped because a stage failed on
+#                       them (poisoned executables never survive)
+#   validation_failures : operands rejected at session ingress
 SESSION_STATS = ("calls", "plan_cache_hits", "plan_cache_misses",
                  "plan_seconds_saved", "payload_repacks", "traces",
-                 "evictions")
+                 "evictions", "retries", "fallbacks", "quarantined",
+                 "validation_failures")
 
 
 def snap_to_tiles(part: Partition1D, bs: int) -> Partition1D:

@@ -37,6 +37,18 @@ fires from the traced body only, so ``stats["traces"]`` counts real
 Policy (ROADMAP): applications never call ``build_device_plan`` /
 ``compile_ring`` directly — BC, AMG, MCL and sketching all multiply
 through a session, so every iterated workload amortizes planning for free.
+
+Hardened-runtime contract (see ``core/validate.py`` for the taxonomy):
+operands are validated at ingress (a malformed request raises
+:class:`ValidationError` before it can touch the cache); every pipeline
+stage (plan / compile / execute / repack) runs under seeded-jitter
+exponential-backoff retries; a stage that stays broken walks the
+**degradation ladder** — engine fallback pallas→jnp, then algorithm
+downgrade 3d→2d→1d — and every rung is bitwise oracle-equivalent, so a
+degraded answer is still *the* answer. Cached entries whose stage fails
+are quarantined (dropped + device buffers released) and a per-key circuit
+breaker stops re-planning a key that keeps failing. Whatever escapes the
+ladder is a typed :class:`SpGEMMError`; bare ``RuntimeError`` never leaks.
 """
 
 from __future__ import annotations
@@ -48,14 +60,22 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
+from ..runtime.fault_tolerance import RetryPolicy, with_retries
 from .device_common import SESSION_STATS, resolve_engine
 from .semiring import PLUS_TIMES, Semiring
 from .sparse import CSC
+from .validate import (DeviceExecError, SpGEMMError, ValidationError,
+                       validate_matmul_operands, wrap_stage_error)
 
 __all__ = ["SpGEMMSession", "session_or_new", "structure_fingerprint",
-           "values_fingerprint", "ALGORITHMS"]
+           "values_fingerprint", "ALGORITHMS", "DOWNGRADE"]
 
 ALGORITHMS = ("1d", "2d", "3d")
+
+# the algorithm rungs of the degradation ladder, most- to least-demanding;
+# every rung is bitwise-pinned to the same host oracle, so a downgraded
+# call returns the identical CSC — it just moves more bytes to get there
+DOWNGRADE = {"1d": ("1d",), "2d": ("2d", "1d"), "3d": ("3d", "2d", "1d")}
 
 
 def structure_fingerprint(mat: CSC) -> bytes:
@@ -110,6 +130,15 @@ class _Entry:
         self.repack = repack
         self.val_fp = val_fp
 
+    def release(self) -> None:
+        """Drop the device buffer references (the payload/schedule stacks in
+        ``args``) and the compiled executable so eviction actually returns
+        device memory — an evicted entry kept alive by a stray reference
+        must not pin its arrays."""
+        self.args = []
+        self.fn = None
+        self.repack = None
+
 
 class SpGEMMSession:
     """Persistent SpGEMM session over the device engines (1D/2D/3D).
@@ -127,19 +156,56 @@ class SpGEMMSession:
         plan_seconds   : host planning time spent by THIS call (0.0 on hit)
         comm_bytes_planned / comm_bytes_padded / messages / dense_flops :
                          the executed plan's stats surface
-        algorithm      : which engine served the call
+        algorithm      : the algorithm rung that actually served the call
+        engine         : the engine rung that actually served the call
+        requested_algorithm : what the caller asked for (== algorithm
+                         unless the ladder downgraded)
+        degraded       : served by a rung below the requested one
+        retries        : per-stage retry attempts spent by THIS call
+
+    Hardening knobs (all optional; defaults are production-shaped):
+
+    ``validate``        — run :func:`validate_matmul_operands` at ingress.
+    ``fault_injector``  — a :class:`runtime.faults.FaultInjector` fired at
+                          the top of every stage attempt (tests/chaos).
+    ``retry_policy``    — :class:`runtime.RetryPolicy` for per-stage
+                          retries (exponential backoff + jitter).
+    ``retry_sleep`` / ``retry_rng`` — injectable sleep/jitter source so
+                          tier-1 tests never wall-clock-sleep.
+    ``breaker_threshold`` — consecutive failures of one cache key before
+                          its circuit opens and the rung fails fast.
     """
 
     def __init__(self, maxsize: int = 32,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, *,
+                 validate: bool = True,
+                 fault_injector=None,
+                 retry_policy: Optional[RetryPolicy] = None,
+                 retry_sleep: Callable[[float], None] = time.sleep,
+                 retry_rng: Optional[np.random.Generator] = None,
+                 breaker_threshold: int = 3):
         if maxsize < 1:
             raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        if breaker_threshold < 1:
+            raise ValueError(f"breaker_threshold must be >= 1, "
+                             f"got {breaker_threshold}")
         self.maxsize = maxsize
         self.interpret = interpret
+        self.validate = validate
+        self.fault_injector = fault_injector
+        self.retry_policy = retry_policy if retry_policy is not None else \
+            RetryPolicy(max_retries=2, backoff_s=0.05, backoff_mult=2.0,
+                        jitter=0.25)
+        self._retry_sleep = retry_sleep
+        self._retry_rng = retry_rng
+        self.breaker_threshold = breaker_threshold
         self._cache: "OrderedDict[tuple, _Entry]" = OrderedDict()
         # loop-invariant-operand blockize reuse inside the 1D planner (BC
         # re-plans the same adjacency against a fresh frontier every level)
         self._blockize_cache: dict = {}
+        # circuit breaker: cache key -> consecutive stage failures; reset
+        # on the first success, opened at breaker_threshold
+        self._quarantine: dict = {}
         self.stats = {k: 0 for k in SESSION_STATS}
         self.stats["plan_seconds_saved"] = 0.0
         self.last_call: dict = {}
@@ -149,34 +215,66 @@ class SpGEMMSession:
     def _count_trace(self):
         self.stats["traces"] += 1
 
-    def _build(self, a: CSC, b: CSC, algorithm: str, nparts: int, grid: int,
-               layers: int, bs: int, nblocks: Optional[int],
-               semiring: Semiring, engine: str, dtype) -> _Entry:
-        from .spgemm_1d_device import (build_device_plan, compile_ring,
-                                       decode_ring_output,
+    def _on_retry(self, attempt: int, exc: Exception) -> None:
+        self.stats["retries"] += 1
+
+    def _stage(self, stage: str, thunk: Callable, context: dict):
+        """Run one pipeline stage: fault-injection point + retry/backoff,
+        wrapping whatever survives retries into the stage's typed error."""
+
+        def attempt():
+            if self.fault_injector is not None:
+                self.fault_injector.fire(stage)
+            return thunk()
+
+        try:
+            return with_retries(attempt, self.retry_policy,
+                                on_retry=self._on_retry,
+                                sleep=self._retry_sleep,
+                                rng=self._retry_rng)()
+        except Exception as e:
+            raise wrap_stage_error(stage, e, context) from e
+
+    def _record_failure(self, key: tuple) -> None:
+        """A rung failed on ``key``: bump its breaker count and quarantine
+        any cached entry (drop + release buffers) so a poisoned
+        plan/executable can never serve a later call."""
+        self._quarantine[key] = self._quarantine.get(key, 0) + 1
+        entry = self._cache.pop(key, None)
+        if entry is not None:
+            entry.release()
+            self.stats["quarantined"] += 1
+
+    def _plan(self, a: CSC, b: CSC, algorithm: str, nparts: int, grid: int,
+              layers: int, bs: int, nblocks: Optional[int],
+              semiring: Semiring, dtype):
+        """Host planning only (the ``plan`` stage); returns
+        (plan, decode, repack)."""
+        from .spgemm_1d_device import (build_device_plan, decode_ring_output,
                                        repack_ring_payloads)
-        from .spgemm_2d_device import (build_summa_plan, compile_summa,
-                                       decode_summa_output,
+        from .spgemm_2d_device import (build_summa_plan, decode_summa_output,
                                        repack_summa_payloads)
 
         if algorithm == "1d":
             plan = build_device_plan(
                 a, b, nparts, bs=bs, nblocks=nblocks, dtype=dtype,
                 semiring=semiring, a_blockize_cache=self._blockize_cache)
-            fn, args = compile_ring(plan, engine=engine,
-                                    interpret=self.interpret,
-                                    trace_probe=self._count_trace)
-            decode, repack = decode_ring_output, repack_ring_payloads
-        else:
-            plan = build_summa_plan(
-                a, b, grid=grid, layers=layers if algorithm == "3d" else 1,
-                bs=bs, dtype=dtype, semiring=semiring)
-            fn, args = compile_summa(plan, engine=engine,
-                                     interpret=self.interpret,
-                                     trace_probe=self._count_trace)
-            decode, repack = decode_summa_output, repack_summa_payloads
-        return _Entry(plan, fn, list(args), decode, repack,
-                      (values_fingerprint(a), values_fingerprint(b)))
+            return plan, decode_ring_output, repack_ring_payloads
+        plan = build_summa_plan(
+            a, b, grid=grid, layers=layers if algorithm == "3d" else 1,
+            bs=bs, dtype=dtype, semiring=semiring)
+        return plan, decode_summa_output, repack_summa_payloads
+
+    def _compile(self, plan, algorithm: str, engine: str):
+        """Trace + compile the shard_map body (the ``compile`` stage);
+        returns (fn, device args)."""
+        from .spgemm_1d_device import compile_ring
+        from .spgemm_2d_device import compile_summa
+
+        compiler = compile_ring if algorithm == "1d" else compile_summa
+        fn, args = compiler(plan, engine=engine, interpret=self.interpret,
+                            trace_probe=self._count_trace)
+        return fn, list(args)
 
     # ---- the one public multiply ------------------------------------------
 
@@ -202,8 +300,63 @@ class SpGEMMSession:
             raise ValueError(
                 f"algorithm must be one of {ALGORITHMS}, got {algorithm!r}")
         engine = resolve_engine(engine)
-        geom = (nparts,) if algorithm == "1d" else \
-            (grid, layers if algorithm == "3d" else 1)
+        self.stats["calls"] += 1
+        if self.validate:
+            try:
+                validate_matmul_operands(a, b, semiring=semiring)
+            except ValidationError:
+                self.stats["validation_failures"] += 1
+                raise
+
+        # the degradation ladder: engine fallback inside each algorithm
+        # rung, then algorithm downgrade. Every rung is bitwise
+        # oracle-equivalent, so descending trades comm volume for service.
+        rungs = []
+        for alg in DOWNGRADE[algorithm]:
+            rungs.append((alg, engine))
+            if engine == "pallas":
+                rungs.append((alg, "jnp"))
+
+        retries_before = self.stats["retries"]
+        last_err: Optional[SpGEMMError] = None
+        for i, (alg_r, eng_r) in enumerate(rungs):
+            try:
+                c, info = self._run_rung(a, b, alg_r, eng_r, algorithm,
+                                         nparts, grid, layers, bs, nblocks,
+                                         semiring, dtype)
+            except SpGEMMError as e:
+                last_err = e
+                if i + 1 < len(rungs):
+                    self.stats["fallbacks"] += 1
+                continue
+            s = info["plan_stats"]
+            self.last_call = dict(
+                cache_hit=info["cache_hit"], repacked=info["repacked"],
+                algorithm=alg_r, engine=eng_r,
+                requested_algorithm=algorithm, degraded=i > 0,
+                retries=self.stats["retries"] - retries_before,
+                plan_seconds=info["plan_seconds"],
+                comm_bytes_planned=s["comm_bytes_planned"],
+                comm_bytes_padded=s["comm_bytes_padded"],
+                messages=s["messages"], dense_flops=s["dense_flops"])
+            return c
+        raise last_err
+
+    def _run_rung(self, a: CSC, b: CSC, algorithm: str, engine: str,
+                  requested: str, nparts: int, grid: int, layers: int,
+                  bs: int, nblocks: Optional[int], semiring: Semiring,
+                  dtype) -> Tuple[CSC, dict]:
+        """One rung of the ladder: serve the multiply with a fixed
+        (algorithm, engine), all four stages under retry + typed wrapping.
+
+        A downgraded 1d rung inherits the 2d/3d call's device budget
+        (``grid*grid`` ring parts); a downgraded 2d rung keeps the grid and
+        collapses the layers.
+        """
+        if algorithm == "1d":
+            geom = (nparts if requested == "1d" else grid * grid,)
+        else:
+            geom = (grid, layers if algorithm == "3d" else 1)
         # nblocks is the 1D ring's Algorithm-2 fetch-grouping knob; the
         # SUMMA planners have no such parameter, so it must not split
         # byte-identical 2d/3d plans into distinct entries
@@ -211,59 +364,89 @@ class SpGEMMSession:
                nblocks if algorithm == "1d" else None,
                semiring.name, engine, np.dtype(dtype).str,
                structure_fingerprint(a), structure_fingerprint(b))
+        ctx = {"algorithm": algorithm, "engine": engine,
+               "requested_algorithm": requested}
+        failures = self._quarantine.get(key, 0)
+        if failures >= self.breaker_threshold:
+            raise DeviceExecError(
+                "circuit breaker open: this plan-cache key failed "
+                f"{failures} consecutive times", stage="execute",
+                context=ctx)
 
-        self.stats["calls"] += 1
         entry = self._cache.get(key)
         hit = entry is not None
         repacked = False
         plan_seconds = 0.0
-        if hit:
-            self._cache.move_to_end(key)
-            self.stats["plan_cache_hits"] += 1
-            self.stats["plan_seconds_saved"] += \
-                entry.plan.stats["plan_seconds"]
-            val_fp = (values_fingerprint(a), values_fingerprint(b))
-            if val_fp != entry.val_fp:
-                # values-only path: refill payload stacks, keep the plan,
-                # the schedules and the compiled executable — and only for
-                # the side(s) whose values actually changed (BC's backward
-                # sweep keeps the adjacency operand bit-identical while
-                # the frontier values move every level)
-                new_a, new_b = entry.repack(
-                    entry.plan,
-                    a if val_fp[0] != entry.val_fp[0] else None,
-                    b if val_fp[1] != entry.val_fp[1] else None)
-                import jax
-                if new_a is not None:
-                    entry.args[0] = jax.device_put(new_a,
-                                                   entry.args[0].sharding)
-                if new_b is not None:
-                    entry.args[1] = jax.device_put(new_b,
-                                                   entry.args[1].sharding)
-                entry.val_fp = val_fp
-                self.stats["payload_repacks"] += 1
-                repacked = True
-        else:
-            t0 = time.perf_counter()
-            entry = self._build(a, b, algorithm, nparts, grid, layers, bs,
-                                nblocks, semiring, engine, dtype)
-            plan_seconds = time.perf_counter() - t0
+        try:
+            if hit:
+                self._cache.move_to_end(key)
+                self.stats["plan_cache_hits"] += 1
+                self.stats["plan_seconds_saved"] += \
+                    entry.plan.stats["plan_seconds"]
+                val_fp = (values_fingerprint(a), values_fingerprint(b))
+                if val_fp != entry.val_fp:
+                    # values-only path: refill payload stacks, keep the
+                    # plan, the schedules and the compiled executable — and
+                    # only for the side(s) whose values actually changed
+                    # (BC's backward sweep keeps the adjacency operand
+                    # bit-identical while the frontier moves every level).
+                    # A mid-repack failure quarantines the entry, so a
+                    # half-swapped payload stack can never serve a call.
+                    def do_repack():
+                        new_a, new_b = entry.repack(
+                            entry.plan,
+                            a if val_fp[0] != entry.val_fp[0] else None,
+                            b if val_fp[1] != entry.val_fp[1] else None)
+                        import jax
+                        if new_a is not None:
+                            entry.args[0] = jax.device_put(
+                                new_a, entry.args[0].sharding)
+                        if new_b is not None:
+                            entry.args[1] = jax.device_put(
+                                new_b, entry.args[1].sharding)
+
+                    self._stage("repack", do_repack, ctx)
+                    entry.val_fp = val_fp
+                    self.stats["payload_repacks"] += 1
+                    repacked = True
+            else:
+                t0 = time.perf_counter()
+                plan, decode, repack = self._stage(
+                    "plan",
+                    lambda: self._plan(a, b, algorithm, geom[0], grid,
+                                       layers, bs, nblocks, semiring,
+                                       dtype),
+                    ctx)
+                fn, args = self._stage(
+                    "compile",
+                    lambda: self._compile(plan, algorithm, engine), ctx)
+                plan_seconds = time.perf_counter() - t0
+                entry = _Entry(plan, fn, args, decode, repack,
+                               (values_fingerprint(a),
+                                values_fingerprint(b)))
+
+            def do_execute():
+                out = np.asarray(entry.fn(*entry.args))
+                return entry.decode(entry.plan, out)
+
+            c = self._stage("execute", do_execute, ctx)
+        except SpGEMMError:
+            self._record_failure(key)
+            raise
+        # success: only now may a cold entry enter the cache — a plan that
+        # never executed cleanly is never cached, so injected faults can't
+        # poison it — and the key's breaker resets
+        if not hit:
             self.stats["plan_cache_misses"] += 1
             self._cache[key] = entry
             while len(self._cache) > self.maxsize:
-                self._cache.popitem(last=False)
+                _, old = self._cache.popitem(last=False)
+                old.release()
                 self.stats["evictions"] += 1
-
-        out = np.asarray(entry.fn(*entry.args))
-        c = entry.decode(entry.plan, out)
-        s = entry.plan.stats
-        self.last_call = dict(
-            cache_hit=hit, repacked=repacked, algorithm=algorithm,
-            plan_seconds=plan_seconds,
-            comm_bytes_planned=s["comm_bytes_planned"],
-            comm_bytes_padded=s["comm_bytes_padded"],
-            messages=s["messages"], dense_flops=s["dense_flops"])
-        return c
+        self._quarantine.pop(key, None)
+        return c, dict(cache_hit=hit, repacked=repacked,
+                       plan_seconds=plan_seconds,
+                       plan_stats=entry.plan.stats)
 
     # ---- maintenance ------------------------------------------------------
 
@@ -271,6 +454,10 @@ class SpGEMMSession:
         return len(self._cache)
 
     def clear(self) -> None:
-        """Drop every cached plan/executable (stats are kept)."""
+        """Drop every cached plan/executable, releasing the device buffer
+        references each entry pinned (stats are kept; breakers reset)."""
+        for entry in self._cache.values():
+            entry.release()
         self._cache.clear()
         self._blockize_cache.clear()
+        self._quarantine.clear()

@@ -1,2 +1,7 @@
 from .fault_tolerance import (RetryPolicy, StepTimer, StragglerStats,
                               TrainLoopRunner, with_retries)
+from .faults import (STAGES, FaultInjector, InjectedFault,
+                     SimulatedCorruption, SimulatedOOM,
+                     SimulatedXlaRuntimeError)
+from .resumable import (LoopCheckpointer, pack_csc, pack_csc_list,
+                        unpack_csc, unpack_csc_list)

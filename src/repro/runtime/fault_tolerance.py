@@ -40,27 +40,46 @@ __all__ = ["RetryPolicy", "with_retries", "StragglerStats", "StepTimer",
 
 @dataclasses.dataclass(frozen=True)
 class RetryPolicy:
+    """``jitter`` spreads the backoff multiplicatively: each pause is
+    ``delay * (1 + jitter * u)`` with ``u ~ U[0, 1)``, so a fleet of
+    workers retrying the same dead link does not stampede in lockstep."""
     max_retries: int = 3
     backoff_s: float = 0.5
     backoff_mult: float = 2.0
+    jitter: float = 0.0
     retryable: tuple = (RuntimeError,)
 
 
 def with_retries(fn: Callable, policy: RetryPolicy = RetryPolicy(),
-                 on_retry: Optional[Callable[[int, Exception], None]] = None):
-    """Wrap ``fn``; transient failures back off and retry."""
+                 on_retry: Optional[Callable[[int, Exception], None]] = None,
+                 *, sleep: Callable[[float], None] = time.sleep,
+                 rng: Optional[np.random.Generator] = None):
+    """Wrap ``fn``; transient failures back off and retry.
+
+    ``sleep`` and ``rng`` are injectable so tests (and the SpGEMM
+    session's ladder) drive the backoff schedule without wall-clock
+    sleeps or nondeterministic jitter: pass ``sleep=fake.append`` to
+    record the schedule, ``rng=np.random.default_rng(seed)`` to pin it.
+    """
 
     def wrapped(*args, **kwargs):
         delay = policy.backoff_s
+        gen = rng
         for attempt in range(policy.max_retries + 1):
             try:
                 return fn(*args, **kwargs)
-            except policy.retryable as e:  # pragma: no cover - timing
+            except policy.retryable as e:
                 if attempt == policy.max_retries:
                     raise
                 if on_retry is not None:
                     on_retry(attempt, e)
-                time.sleep(delay)
+                pause = delay
+                if policy.jitter > 0.0:
+                    if gen is None:
+                        gen = np.random.default_rng()
+                    pause = delay * (1.0 + policy.jitter
+                                     * float(gen.random()))
+                sleep(pause)
                 delay *= policy.backoff_mult
         raise AssertionError("unreachable")
 
@@ -113,13 +132,14 @@ class TrainLoopRunner:
     def __init__(self, step_fn: Callable, state: Any, ckpt_dir: str,
                  *, ckpt_every: int = 100, keep: int = 3,
                  retry: RetryPolicy = RetryPolicy(),
+                 retry_sleep: Callable[[float], None] = time.sleep,
                  straggler_window: int = 50):
         self.manager = CheckpointManager(ckpt_dir, keep=keep)
         self.stats = StragglerStats(window=straggler_window)
         self.ckpt_every = ckpt_every
         self.state = state
         self.start_step = 0
-        self._step_fn = with_retries(step_fn, retry)
+        self._step_fn = with_retries(step_fn, retry, sleep=retry_sleep)
         # auto-resume
         from ..checkpoint import latest_step
         last = latest_step(ckpt_dir)

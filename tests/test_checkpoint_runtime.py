@@ -66,6 +66,7 @@ def test_elastic_reshard_restore(tmp_path):
 
 def test_with_retries_transient():
     calls = {"n": 0}
+    sleeps = []
 
     def flaky():
         calls["n"] += 1
@@ -74,19 +75,68 @@ def test_with_retries_transient():
         return "ok"
 
     wrapped = with_retries(flaky, RetryPolicy(max_retries=3,
-                                              backoff_s=0.01))
+                                              backoff_s=0.01),
+                           sleep=sleeps.append)
     assert wrapped() == "ok"
     assert calls["n"] == 3
+    assert sleeps == [0.01, 0.02]         # exponential, no jitter
 
 
 def test_with_retries_exhaustion():
+    calls = {"n": 0}
+    sleeps = []
+    retried = []
+
     def always_fails():
+        calls["n"] += 1
         raise RuntimeError("down")
 
     wrapped = with_retries(always_fails,
-                           RetryPolicy(max_retries=2, backoff_s=0.01))
-    with pytest.raises(RuntimeError):
+                           RetryPolicy(max_retries=2, backoff_s=0.01),
+                           on_retry=lambda i, e: retried.append(i),
+                           sleep=sleeps.append)
+    with pytest.raises(RuntimeError, match="down"):
         wrapped()
+    assert calls["n"] == 3                # 1 attempt + 2 retries
+    assert retried == [0, 1]
+    assert sleeps == [0.01, 0.02]
+
+
+def test_with_retries_jitter_bounded_and_seeded():
+    sleeps = []
+
+    def always_fails():
+        raise RuntimeError("down")
+
+    policy = RetryPolicy(max_retries=3, backoff_s=1.0, backoff_mult=2.0,
+                         jitter=0.5)
+    with pytest.raises(RuntimeError):
+        with_retries(always_fails, policy, sleep=sleeps.append,
+                     rng=np.random.default_rng(0))()
+    # each pause is delay * (1 + jitter*u), u in [0, 1)
+    for pause, base in zip(sleeps, (1.0, 2.0, 4.0)):
+        assert base <= pause < base * 1.5
+    # seeded rng => reproducible schedule
+    replay = []
+    with pytest.raises(RuntimeError):
+        with_retries(always_fails, policy, sleep=replay.append,
+                     rng=np.random.default_rng(0))()
+    assert replay == sleeps
+
+
+def test_with_retries_non_retryable_raises_immediately():
+    calls = {"n": 0}
+    sleeps = []
+
+    def fails_typed():
+        calls["n"] += 1
+        raise ValueError("not transient")
+
+    wrapped = with_retries(fails_typed, RetryPolicy(max_retries=5),
+                           sleep=sleeps.append)
+    with pytest.raises(ValueError):
+        wrapped()
+    assert calls["n"] == 1 and sleeps == []
 
 
 def test_straggler_flagging():
@@ -96,6 +146,56 @@ def test_straggler_flagging():
     assert stats.record(1.0) is True      # 10x step => straggler
     assert stats.flagged == 1
     assert stats.summary()["step_time_max"] >= 1.0
+
+
+def test_straggler_needs_warmup_window():
+    """Under 10 samples nothing is flagged (no stable baseline yet), and
+    the z-score uses the rolling window, not all history."""
+    stats = StragglerStats(window=20, z_thresh=3.0)
+    for _ in range(9):
+        assert stats.record(0.1) is False
+    assert stats.record(50.0) is False    # 10th sample: still warming up
+    assert stats.flagged == 0
+    # the 50.0 outlier inflates the window's std enough that a merely-slow
+    # step no longer stands out at z=3
+    assert stats.record(0.5) is False
+    for _ in range(20):                   # outlier ages out of the window
+        stats.record(0.1)
+    assert stats.record(1.0) is True
+    assert stats.flagged == 1
+
+
+def test_straggler_summary_fields():
+    stats = StragglerStats()
+    assert stats.summary() == {"step_time_mean": 0.0, "stragglers": 0}
+    for dt in (0.1, 0.2, 0.3):
+        stats.record(dt)
+    s = stats.summary()
+    assert s["step_time_p50"] == pytest.approx(0.2)
+    assert s["step_time_mean"] == pytest.approx(0.2)
+    assert s["stragglers"] == 0.0
+
+
+def test_runner_retries_transient_step_without_sleeping(tmp_path):
+    """The runner's step wrapper retries RuntimeError; the injectable
+    sleep records the backoff schedule instead of wall-clocking it."""
+    sleeps = []
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 2:               # one transient mid-run failure
+            raise RuntimeError("preempted link")
+        return state + 1, {"loss": jnp.asarray(0.0)}
+
+    r = TrainLoopRunner(step_fn, jnp.asarray(0), str(tmp_path),
+                        ckpt_every=100,
+                        retry=RetryPolicy(max_retries=2, backoff_s=0.25),
+                        retry_sleep=sleeps.append)
+    out = r.run(lambda s: s, num_steps=3)
+    assert int(np.asarray(out)) == 3
+    assert calls["n"] == 4                # 3 steps + 1 retried attempt
+    assert sleeps == [0.25]
 
 
 def test_runner_resume_after_crash(tmp_path):

@@ -1,0 +1,474 @@
+"""Hardened SpGEMM runtime — validation, fault injection, the ladder.
+
+The acceptance contract this file pins:
+
+  * **ingress validation** — every structural corruption class (broken
+    indptr, out-of-bounds / unsorted indices, NaN / illegal Inf payloads,
+    dimension mismatch) raises a typed :class:`ValidationError` *before*
+    the session's cache or planner is touched;
+  * **seeded fault grid** — with a deterministic injector firing at every
+    pipeline stage (plan / compile / execute / repack) across all three
+    algorithms and all three semirings, every ``matmul`` either succeeds
+    **bitwise-equal to the host oracle** (via retries or a rung of the
+    degradation ladder, visible in ``SESSION_STATS``) or raises a typed
+    :class:`SpGEMMError` — a bare ``RuntimeError`` never escapes;
+  * **no poisoned survivors** — a cache entry whose stage fails is
+    quarantined (dropped, device buffers released); after a fault storm
+    the surviving cache replays clean and bitwise-correct;
+  * **circuit breaker** — a key that keeps failing stops being retried;
+  * **resumable apps** — MCL / BC runs aborted mid-iteration by a fault
+    resume from their checkpoint and finish bitwise-identical to an
+    uninterrupted run.
+
+In-process tests run the full shard_map + scheduled-kernel path at
+single-device geometry (nparts=1 / grid=1), like tests/test_session.py.
+"""
+
+import numpy as np
+import pytest
+
+import _propcheck as st
+from repro.core import (MIN_PLUS, PLUS_TIMES, SpGEMMSession, by_name,
+                        erdos_renyi, from_coo)
+from repro.core.session import DOWNGRADE
+from repro.core.sparse import CSC
+from repro.core.spgemm_1d import spgemm_1d
+from repro.core.validate import (DeviceExecError, PlanError, SpGEMMError,
+                                 ValidationError, validate_csc,
+                                 validate_matmul_operands, wrap_stage_error)
+from repro.runtime import FaultInjector, InjectedFault, RetryPolicy
+from repro.runtime.faults import STAGES
+
+SEMIRINGS = ("plus_times", "bool_or_and", "min_plus")
+ALG_GEOM = (("1d", dict(nparts=1)), ("2d", dict(grid=1)),
+            ("3d", dict(grid=1, layers=1)))
+
+
+def _int_matrix(n=40, seed=3):
+    a = erdos_renyi(n, n, 4.0, seed=seed)
+    a.data[:] = np.rint(2 * a.data)
+    a.data[a.data == 0] = 1.0
+    return a
+
+
+def _oracle(a, b, sr):
+    orc = spgemm_1d(a, b, 1, semiring=sr).concat()
+    if sr.name == "plus_times":
+        orc = orc.prune(0.0)
+    return orc
+
+
+def _assert_bitwise(c, orc, ctx=None):
+    assert np.array_equal(c.indptr, orc.indptr), ctx
+    assert np.array_equal(c.indices, orc.indices), ctx
+    assert np.array_equal(c.data, orc.data.astype(np.float32)), ctx
+
+
+def _session(**kw):
+    """A session whose retry machinery never wall-clock-sleeps."""
+    kw.setdefault("retry_policy",
+                  RetryPolicy(max_retries=3, backoff_s=0.01, jitter=0.5))
+    return SpGEMMSession(retry_sleep=lambda _: None,
+                         retry_rng=np.random.default_rng(7), **kw)
+
+
+# ---------------------------------------------------------------------------
+# ingress validation
+# ---------------------------------------------------------------------------
+
+def _good():
+    return _int_matrix(20, seed=5)
+
+
+def test_validate_accepts_real_generators():
+    for seed in range(3):
+        validate_csc(erdos_renyi(25, 17, 3.0, seed=seed))
+    validate_matmul_operands(_good(), _good(), semiring=PLUS_TIMES)
+
+
+def test_validate_rejects_each_corruption_class():
+    def corrupt(mutate):
+        m = _good()
+        m = CSC(m.indptr.copy(), m.indices.copy(), m.data.copy(), m.shape)
+        mutate(m)
+        with pytest.raises(ValidationError) as ei:
+            validate_csc(m, name="a")
+        assert ei.value.stage == "validate"
+        return str(ei.value)
+
+    assert "monotone" in corrupt(
+        lambda m: m.indptr.__setitem__(3, m.indptr[5] + 9))
+    assert "out of bounds" in corrupt(
+        lambda m: m.indices.__setitem__(0, m.nrows + 4))
+    assert "out of bounds" in corrupt(lambda m: m.indices.__setitem__(1, -2))
+    assert "strictly increasing" in corrupt(
+        lambda m: m.indices.__setitem__(
+            slice(0, 2), m.indices[1::-1].copy()))
+    assert "NaN" in corrupt(lambda m: m.data.__setitem__(0, np.nan))
+    assert "non-finite" in corrupt(lambda m: m.data.__setitem__(0, -np.inf))
+    assert "indptr[-1]" in corrupt(
+        lambda m: m.indptr.__setitem__(-1, m.nnz + 3))
+
+
+def test_validate_length_and_dtype_checks():
+    m = _good()
+    with pytest.raises(ValidationError, match="expected ncols"):
+        validate_csc(CSC(m.indptr[:-1].copy(), m.indices, m.data, m.shape))
+    with pytest.raises(ValidationError, match="not integral"):
+        validate_csc(CSC(m.indptr.astype(np.float64), m.indices, m.data,
+                         m.shape))
+    with pytest.raises(ValidationError, match="data has length"):
+        validate_csc(CSC(m.indptr, m.indices, m.data[:-1], m.shape))
+    with pytest.raises(ValidationError, match="expected CSC"):
+        validate_csc(np.eye(3))
+
+
+def test_validate_semiring_aware_inf_policy():
+    m = _good()
+    inf = CSC(m.indptr, m.indices, m.data.copy(), m.shape)
+    inf.data[0] = np.inf
+    # +inf IS the min-plus additive identity: storing it is legal there
+    validate_csc(inf, semiring=MIN_PLUS)
+    with pytest.raises(ValidationError, match="non-finite"):
+        validate_csc(inf, semiring=PLUS_TIMES)
+    with pytest.raises(ValidationError, match="non-finite"):
+        validate_csc(inf)
+    neg = CSC(m.indptr, m.indices, m.data.copy(), m.shape)
+    neg.data[0] = -np.inf
+    with pytest.raises(ValidationError, match="non-finite"):
+        validate_csc(neg, semiring=MIN_PLUS)
+
+
+def test_inner_dimension_mismatch():
+    a = erdos_renyi(10, 12, 2.0, seed=0)
+    b = erdos_renyi(11, 9, 2.0, seed=1)
+    with pytest.raises(ValidationError, match="inner dimensions"):
+        validate_matmul_operands(a, b)
+
+
+def test_ingress_rejects_before_touching_cache():
+    s = _session()
+    bad = _good()
+    bad = CSC(bad.indptr.copy(), bad.indices.copy(), bad.data.copy(),
+              bad.shape)
+    bad.indices[0] = bad.nrows + 1
+    with pytest.raises(ValidationError):
+        s.matmul(bad, _good(), bs=16)
+    assert s.stats["validation_failures"] == 1
+    assert len(s) == 0 and s.stats["plan_cache_misses"] == 0
+    # the session stays serviceable for well-formed requests
+    a = _good()
+    _assert_bitwise(s.matmul(a, a, bs=16), _oracle(a, a, PLUS_TIMES))
+
+
+def test_wrap_stage_error_taxonomy():
+    assert isinstance(wrap_stage_error("plan", ValueError("x")), PlanError)
+    assert isinstance(wrap_stage_error("execute", RuntimeError("x")),
+                      DeviceExecError)
+    typed = ValidationError("already typed", stage="validate")
+    assert wrap_stage_error("execute", typed) is typed
+
+
+# ---------------------------------------------------------------------------
+# the seeded injector itself
+# ---------------------------------------------------------------------------
+
+def _fault_sequence(inj, n=400):
+    seq = []
+    for i in range(n):
+        stage = STAGES[i % 4]
+        try:
+            inj.fire(stage)
+            seq.append(None)
+        except InjectedFault as e:
+            seq.append((stage, type(e).__name__))
+    return seq
+
+
+def test_injector_is_deterministic_per_seed():
+    s1 = _fault_sequence(FaultInjector(seed=11, rates=0.3))
+    s2 = _fault_sequence(FaultInjector(seed=11, rates=0.3))
+    s3 = _fault_sequence(FaultInjector(seed=12, rates=0.3))
+    assert s1 == s2
+    assert s1 != s3
+    assert any(s1)          # the rate actually fires
+    assert not all(s1)      # ...but not always
+
+
+def test_injector_stage_rates_arm_and_cap():
+    inj = FaultInjector(seed=0, rates={"execute": 1.0}, arm_after=3,
+                        max_faults=2)
+    inj.fire("plan")                      # plan rate is 0 — never faults
+    inj.fire("execute")                   # still disarmed (2 of 3)
+    inj.fire("execute")                   # still disarmed (3 of 3)
+    for _ in range(2):
+        with pytest.raises(InjectedFault):
+            inj.fire("execute")
+    inj.fire("execute")                   # max_faults reached
+    assert inj.injected == {"plan": 0, "compile": 0, "execute": 2,
+                            "repack": 0}
+    assert inj.calls["execute"] == 5
+
+
+def test_injector_rejects_unknown_stage_and_kind():
+    with pytest.raises(ValueError, match="unknown stages"):
+        FaultInjector(rates={"decode": 1.0})
+    with pytest.raises(ValueError, match="unknown fault kinds"):
+        FaultInjector(kinds=("xla", "cosmic_ray"))
+    with pytest.raises(ValueError, match="unknown stage"):
+        FaultInjector().fire("decode")
+
+
+# ---------------------------------------------------------------------------
+# the acceptance grid: stage × algorithm × semiring under ~30% faults
+# ---------------------------------------------------------------------------
+
+def test_fault_grid_every_call_bitwise_or_typed():
+    """Seeded ~30% fault rate at every stage, all algorithms × semirings,
+    cold + repack calls: each call is bitwise-oracle-equal or raises a
+    typed SpGEMMError; afterwards the cache replays clean (no poisoned
+    entry survived)."""
+    inj = FaultInjector(seed=2, rates=0.3)
+    s = _session(fault_injector=inj)
+    pair = st.int_matmul_pair(max_dim=24, density=0.2)
+    a, b, _, _ = pair.example(np.random.default_rng(0))
+    a2 = CSC(a.indptr.copy(), a.indices.copy(), a.data + 1.0, a.shape)
+
+    served = failed = 0
+    for alg, geom in ALG_GEOM:
+        for srname in SEMIRINGS:
+            sr = by_name(srname)
+            for lhs in (a, a2):        # cold call, then values-only repack
+                ctx = (alg, srname, lhs is a2)
+                try:
+                    c = s.matmul(lhs, b, algorithm=alg, bs=8,
+                                 semiring=sr, **geom)
+                except SpGEMMError:
+                    failed += 1
+                    continue
+                except Exception as e:   # noqa: BLE001 — the contract
+                    pytest.fail(f"untyped {type(e).__name__} escaped the "
+                                f"session at {ctx}: {e}")
+                served += 1
+                _assert_bitwise(c, _oracle(lhs, b, sr), ctx)
+
+    assert inj.total_injected > 0, "the grid never actually faulted"
+    assert s.stats["retries"] > 0, "recovery must be visible in the stats"
+    assert served >= 12, (served, failed, inj.injected)
+
+    # no poisoned survivor: replay the whole grid with injection disabled —
+    # every cached entry that survived the storm must decode bitwise-clean
+    s.fault_injector = None
+    for alg, geom in ALG_GEOM:
+        for srname in SEMIRINGS:
+            sr = by_name(srname)
+            for lhs in (a, a2):
+                c = s.matmul(lhs, b, algorithm=alg, bs=8, semiring=sr,
+                             **geom)
+                _assert_bitwise(c, _oracle(lhs, b, sr), (alg, srname))
+
+
+def test_retry_alone_recovers_and_counts():
+    """A fault rate well below retry exhaustion: the primary rung serves
+    every call (no fallback), with retries visible in the stats."""
+    inj = FaultInjector(seed=5, rates=0.3)
+    s = _session(fault_injector=inj,
+                 retry_policy=RetryPolicy(max_retries=8, backoff_s=0.01,
+                                          jitter=0.5))
+    a = _int_matrix(30, seed=1)
+    for _ in range(6):
+        c = s.matmul(a, a, bs=16)
+        _assert_bitwise(c, _oracle(a, a, PLUS_TIMES))
+        assert s.last_call["degraded"] is False
+        assert s.last_call["algorithm"] == "1d"
+    assert inj.total_injected > 0
+    assert s.stats["retries"] >= inj.total_injected
+    assert s.stats["fallbacks"] == 0
+
+
+def test_ladder_downgrades_3d_to_2d_jnp():
+    """plan stage hard-fails 3 times with zero retries: the ladder walks
+    (3d,pallas) → (3d,jnp) → (2d,pallas) → serves at (2d,jnp), still
+    bitwise-correct, with the descent visible in stats and last_call."""
+    inj = FaultInjector(seed=0, rates={"plan": 1.0}, max_faults=3)
+    s = _session(fault_injector=inj,
+                 retry_policy=RetryPolicy(max_retries=0, backoff_s=0.0))
+    a = _int_matrix(30, seed=2)
+    c = s.matmul(a, a, algorithm="3d", grid=1, layers=1, bs=16)
+    _assert_bitwise(c, _oracle(a, a, PLUS_TIMES))
+    assert s.last_call["degraded"] is True
+    assert s.last_call["requested_algorithm"] == "3d"
+    assert (s.last_call["algorithm"], s.last_call["engine"]) == \
+        ("2d", "jnp")
+    assert s.stats["fallbacks"] == 3
+    assert len(s) == 1      # only the serving rung's entry was cached
+
+
+def test_ladder_exhaustion_raises_typed_not_bare():
+    inj = FaultInjector(seed=0, rates=1.0)
+    s = _session(fault_injector=inj,
+                 retry_policy=RetryPolicy(max_retries=1, backoff_s=0.0))
+    a = _int_matrix(20, seed=4)
+    with pytest.raises(SpGEMMError) as ei:
+        s.matmul(a, a, algorithm="3d", grid=1, layers=1, bs=16)
+    assert not type(ei.value) is RuntimeError  # noqa: E714
+    assert isinstance(ei.value.__cause__, InjectedFault)
+    n_rungs = sum(2 for _ in DOWNGRADE["3d"])   # pallas + jnp per algorithm
+    assert s.stats["fallbacks"] == n_rungs - 1
+    assert len(s) == 0      # nothing poisoned ever entered the cache
+
+
+def test_quarantine_drops_poisoned_cached_entry():
+    s = _session()
+    a = _int_matrix(30, seed=6)
+    _assert_bitwise(s.matmul(a, a, bs=16), _oracle(a, a, PLUS_TIMES))
+    assert len(s) == 1
+    entry = next(iter(s._cache.values()))
+
+    s.fault_injector = FaultInjector(seed=0, rates={"execute": 1.0})
+    s.retry_policy = RetryPolicy(max_retries=0, backoff_s=0.0)
+    with pytest.raises(DeviceExecError):
+        s.matmul(a, a, bs=16)
+    assert s.stats["quarantined"] == 1
+    assert len(s) == 0
+    assert entry.args == [] and entry.fn is None   # buffers released
+
+    # a later clean call re-plans and serves — the key recovered (the
+    # failed jnp rung never counted a miss: only a clean execute caches)
+    s.fault_injector = None
+    _assert_bitwise(s.matmul(a, a, bs=16), _oracle(a, a, PLUS_TIMES))
+    assert s.stats["plan_cache_misses"] == 2
+
+
+def test_repack_fault_falls_back_with_fresh_values():
+    """A corrupted repack quarantines the hit entry; the jnp rung serves
+    the *new* values bitwise-correct (no stale payload survives)."""
+    s = _session()
+    a = _int_matrix(30, seed=7)
+    s.matmul(a, a, bs=16)
+    a2 = CSC(a.indptr.copy(), a.indices.copy(), a.data + 3.0, a.shape)
+
+    s.fault_injector = FaultInjector(seed=0, rates={"repack": 1.0})
+    s.retry_policy = RetryPolicy(max_retries=0, backoff_s=0.0)
+    c = s.matmul(a2, a2, bs=16)
+    _assert_bitwise(c, _oracle(a2, a2, PLUS_TIMES))
+    assert s.last_call["engine"] == "jnp" and s.last_call["degraded"]
+    assert s.stats["quarantined"] == 1
+
+
+def test_circuit_breaker_opens_and_clear_resets():
+    inj = FaultInjector(seed=0, rates={"execute": 1.0})
+    s = _session(fault_injector=inj, breaker_threshold=2,
+                 retry_policy=RetryPolicy(max_retries=0, backoff_s=0.0))
+    a = _int_matrix(20, seed=8)
+    for _ in range(2):
+        with pytest.raises(SpGEMMError):
+            s.matmul(a, a, bs=16)
+    fires_before = inj.calls["execute"]
+    with pytest.raises(DeviceExecError, match="circuit breaker"):
+        s.matmul(a, a, bs=16)
+    assert inj.calls["execute"] == fires_before   # failed fast, no attempt
+
+    s.clear()                                     # breakers reset
+    s.fault_injector = None
+    _assert_bitwise(s.matmul(a, a, bs=16), _oracle(a, a, PLUS_TIMES))
+
+
+# ---------------------------------------------------------------------------
+# eviction / clear release device buffers
+# ---------------------------------------------------------------------------
+
+def test_eviction_releases_device_buffers():
+    s = _session(maxsize=1)
+    a = _int_matrix(30, seed=9)
+    b = _int_matrix(30, seed=10)
+    s.matmul(a, a, bs=16)
+    evicted = next(iter(s._cache.values()))
+    assert evicted.args                       # holds device payloads now
+    s.matmul(b, b, bs=16)                     # capacity 1: a's entry goes
+    assert s.stats["evictions"] == 1
+    assert evicted.args == [] and evicted.fn is None
+    kept = next(iter(s._cache.values()))
+    assert kept.args                          # the live entry still armed
+
+
+def test_clear_releases_device_buffers():
+    s = _session()
+    a = _int_matrix(25, seed=11)
+    s.matmul(a, a, bs=16)
+    entries = list(s._cache.values())
+    s.clear()
+    assert len(s) == 0
+    assert all(e.args == [] and e.fn is None for e in entries)
+
+
+# ---------------------------------------------------------------------------
+# resumable iterative apps
+# ---------------------------------------------------------------------------
+
+def _community_graph(seed=3):
+    from repro.core import block_diagonal_noise
+    return block_diagonal_noise(32, 4, d_in=5.0, d_out=0.1, seed=seed)
+
+
+def test_mcl_resumes_bitwise_after_mid_run_fault(tmp_path):
+    from repro.apps.mcl import mcl
+    g = _community_graph()
+    ref = mcl(g, bs=16, session=_session())
+
+    # break execute permanently after the first two iterations have
+    # completed (MCL's structure moves every early iteration, so each
+    # iteration is a cold call firing plan+compile+execute = 3 →
+    # arm_after=6 kills iteration 3)
+    inj = FaultInjector(seed=0, rates={"execute": 1.0}, arm_after=6)
+    broken = _session(fault_injector=inj,
+                      retry_policy=RetryPolicy(max_retries=0, backoff_s=0.0))
+    ckpt_dir = str(tmp_path / "mcl")
+    with pytest.raises(SpGEMMError):
+        mcl(g, bs=16, session=broken, checkpoint_dir=ckpt_dir)
+    from repro.checkpoint import latest_step
+    resumed_from = latest_step(ckpt_dir)
+    assert resumed_from is not None and resumed_from >= 2
+
+    res = mcl(g, bs=16, session=_session(), checkpoint_dir=ckpt_dir)
+    assert res.iterations == ref.iterations
+    assert res.converged == ref.converged and res.chaos == ref.chaos
+    assert np.array_equal(res.clusters, ref.clusters)
+    _assert_bitwise(res.matrix, ref.matrix)
+    assert res.comm_bytes == ref.comm_bytes
+
+
+def test_bc_resumes_bitwise_after_mid_sweep_fault(tmp_path):
+    from repro.apps.bc import bc_batch
+    from repro.core import spgemm
+
+    def make_fn(fail_at=None):
+        calls = {"n": 0}
+
+        def fn(x, y, sr):
+            calls["n"] += 1
+            if fail_at is not None and calls["n"] >= fail_at:
+                raise DeviceExecError("injected mid-sweep",
+                                      stage="execute")
+            return spgemm(x, y, sr), 11
+        return fn
+
+    from repro.core import symmetrize
+    a = symmetrize(erdos_renyi(24, 24, 2.5, seed=3))
+    a.data[:] = 1.0                                 # unweighted graph
+    sources = np.array([0, 5, 9])
+    ref = bc_batch(a, sources, spgemm_fn=make_fn())
+
+    ckpt_dir = str(tmp_path / "bc")
+    # fail on the 4th multiply — deep enough to land in / near the
+    # backward sweep, so both phases' state must round-trip
+    with pytest.raises(SpGEMMError):
+        bc_batch(a, sources, spgemm_fn=make_fn(fail_at=4),
+                 checkpoint_dir=ckpt_dir)
+    res = bc_batch(a, sources, spgemm_fn=make_fn(),
+                   checkpoint_dir=ckpt_dir)
+    assert np.array_equal(res.scores, ref.scores)
+    assert res.depths == ref.depths
+    assert res.fwd_spgemm_calls + res.bwd_spgemm_calls == \
+        ref.fwd_spgemm_calls + ref.bwd_spgemm_calls
+    assert res.comm_bytes == ref.comm_bytes

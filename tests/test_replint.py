@@ -28,7 +28,8 @@ if str(REPO_ROOT) not in sys.path:  # tools/ is a repo-root package
 
 from tools.replint import all_rules, lint_paths, lint_source  # noqa: E402
 
-RULE_IDS = ("RS001", "RS002", "RS003", "RS004", "RS005", "RS006", "RS007")
+RULE_IDS = ("RS001", "RS002", "RS003", "RS004", "RS005", "RS006", "RS007",
+            "RS008")
 
 
 def lint_snippet(tmp_path, relpath: str, source: str):
@@ -346,6 +347,83 @@ def test_rs007_good_propcheck(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# RS008 — swallowed catch-all handlers in core/runtime
+# ---------------------------------------------------------------------------
+
+BAD_RS008 = """\
+    def fetch(entry):
+        try:
+            return entry.fn()
+        except Exception:
+            return None
+
+    def drain(q):
+        try:
+            q.pop()
+        except:
+            pass
+"""
+
+
+def test_rs008_bad(tmp_path):
+    findings, _ = lint_snippet(
+        tmp_path, "src/repro/core/session2.py", BAD_RS008)
+    assert [(f.rule, f.line) for f in findings] == \
+        [("RS008", 4), ("RS008", 10)]
+
+
+def test_rs008_runtime_in_scope(tmp_path):
+    findings, _ = lint_snippet(
+        tmp_path, "src/repro/runtime/faults2.py", BAD_RS008)
+    assert rules_hit(findings) == ["RS008"]
+
+
+def test_rs008_reraise_and_specific_ok(tmp_path):
+    findings, _ = lint_snippet(
+        tmp_path, "src/repro/core/session2.py", """\
+        def run(entry, stage, ctx):
+            try:
+                return entry.fn()
+            except Exception as e:
+                raise wrap_stage_error(stage, e, ctx) from e
+
+        def lookup(cache, key):
+            try:
+                return cache[key]
+            except KeyError:
+                return None
+
+        def tuple_with_reraise(entry):
+            try:
+                return entry.fn()
+            except (ValueError, Exception):
+                raise
+    """)
+    assert findings == []
+
+
+def test_rs008_out_of_scope_in_apps(tmp_path):
+    # the contract binds the hardened core/runtime layers only
+    findings, _ = lint_snippet(
+        tmp_path, "src/repro/apps/x.py", BAD_RS008)
+    assert findings == []
+
+
+def test_rs008_justified_suppression(tmp_path):
+    findings, suppressed = lint_snippet(
+        tmp_path, "src/repro/runtime/faults2.py", """\
+        def best_effort_release(buf):
+            try:
+                buf.delete()
+            except Exception:  # replint: off=RS008 release is advisory
+                return False
+            return True
+    """)
+    assert findings == []
+    assert suppressed == 1
+
+
+# ---------------------------------------------------------------------------
 # suppression semantics
 # ---------------------------------------------------------------------------
 
@@ -478,6 +556,13 @@ SEEDED_REGRESSIONS = [
 
         def scores(a):
             return build_device_plan(a, a, nparts=4, bs=64)
+    """),
+    ("src/repro/runtime/bad_runtime.py", "RS008", """\
+        def swallow(fn):
+            try:
+                return fn()
+            except Exception:
+                return None
     """),
 ]
 

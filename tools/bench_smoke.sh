@@ -101,6 +101,40 @@ print("session smoke OK: speedups "
       + f"; {hits} app cache hits")
 PY
 
+# Fault-injection smoke: the hardened session under a seeded ~30%
+# per-stage fault rate. Every algorithm x semiring workload must still
+# decode bitwise-equal to the host oracle, the injector must actually
+# fire, and retries stay bounded by the faults injected (the ladder
+# absorbs failures, it doesn't spin).
+python -m benchmarks.fault_injection --json BENCH_paper_figs.json
+
+python - <<'PY'
+import json
+
+rows = {r["name"]: r for r in json.load(open("BENCH_paper_figs.json"))["rows"]
+        if r["bench"] == "fault_injection"}
+assert rows, "fault_injection emitted no rows"
+
+cases = sorted(n[:-len("/match_oracle")] for n in rows
+               if n.endswith("/match_oracle"))
+assert len(cases) == 9, f"expected 3 algos x 3 semirings, got {cases}"
+
+bad = [c for c in cases if float(rows[f"{c}/match_oracle"]["value"]) != 1.0]
+assert not bad, f"session diverged from oracle under faults: {bad}"
+
+total_faults = sum(int(rows[f"{c}/faults_injected"]["value"]) for c in cases)
+assert total_faults > 0, "fault injector never fired — smoke is disarmed"
+
+for c in cases:
+    retries = int(rows[f"{c}/retries"]["value"])
+    faults = int(rows[f"{c}/faults_injected"]["value"])
+    assert retries <= faults, \
+        f"{c}: {retries} retries for {faults} faults — ladder is spinning"
+
+print(f"fault-injection smoke OK: {len(cases)} cases bitwise-correct "
+      f"under {total_faults} injected faults")
+PY
+
 # Device-BC smoke: betweenness centrality end-to-end on the device ring
 # (the fig13 --engine device adapter), scores checked against the local
 # oracle so the adapter and the semiring-generic engine path can't rot.

@@ -108,3 +108,18 @@ RS006_ALLOW = ("tests/*.py", "tests/**/*.py")
 # ---------------------------------------------------------------------------
 # RS007 — hypothesis is uninstallable here; no allowlist at all
 # ---------------------------------------------------------------------------
+
+# ---------------------------------------------------------------------------
+# RS008 — swallowed exceptions in the hardened core/runtime layers: a bare
+# `except:` / `except Exception:` / `except BaseException:` handler that
+# never re-raises hides the failure from the session's typed-error ladder
+# (wrap via core.validate.wrap_stage_error or re-raise instead).
+# ---------------------------------------------------------------------------
+RS008_SCOPE = (
+    "src/repro/core/*.py",
+    "src/repro/core/**/*.py",
+    "src/repro/runtime/*.py",
+)
+
+# exception names considered catch-alls when named in an except clause
+CATCH_ALL_EXC_NAMES = frozenset({"Exception", "BaseException"})

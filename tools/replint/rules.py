@@ -1,4 +1,4 @@
-"""The standing-invariant rules (RS001–RS007).
+"""The standing-invariant rules (RS001–RS008).
 
 Each rule encodes one ROADMAP "Standing policies & invariants" bullet as a
 purely syntactic check over a file's AST — no imports are executed, so the
@@ -351,3 +351,49 @@ class HypothesisImport(Rule):
                         node.module == "hypothesis"
                         or node.module.startswith("hypothesis.")):
                     yield ctx.finding(self.RULE_ID, node, self._MSG)
+
+
+# ---------------------------------------------------------------------------
+# RS008 — swallowed catch-all exception handlers in core/runtime
+# ---------------------------------------------------------------------------
+
+
+def _is_catch_all(handler: ast.ExceptHandler) -> bool:
+    """bare `except:`, or a clause naming Exception/BaseException
+    (directly or inside a tuple)."""
+    t = handler.type
+    if t is None:
+        return True
+    elts = t.elts if isinstance(t, ast.Tuple) else [t]
+    return any(_terminal_name(e) in config.CATCH_ALL_EXC_NAMES
+               for e in elts)
+
+
+@rule
+class SwallowedException(Rule):
+    RULE_ID = "RS008"
+    TITLE = "catch-all except without re-raise in core/runtime"
+    SCOPE = config.RS008_SCOPE
+
+    _MSG = ("catch-all `except{what}` that never re-raises — the hardened-"
+            "runtime contract forbids silently swallowing failures in "
+            "core/runtime: re-raise, wrap via "
+            "`core.validate.wrap_stage_error(...)`, or catch the specific "
+            "exception type (justify true suppressions with "
+            "`# replint: off=RS008 <reason>`)")
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if not _is_catch_all(node):
+                continue
+            # a handler whose body re-raises (bare or wrapped) keeps the
+            # failure visible; one that only logs/returns hides it
+            has_raise = any(isinstance(n, ast.Raise)
+                            for n in ast.walk(node))
+            if not has_raise:
+                what = "" if node.type is None else \
+                    f" {ast.unparse(node.type)}"
+                yield ctx.finding(self.RULE_ID, node,
+                                  self._MSG.format(what=what))
