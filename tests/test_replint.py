@@ -29,7 +29,9 @@ if str(REPO_ROOT) not in sys.path:  # tools/ is a repo-root package
 from tools.replint import all_rules, lint_paths, lint_source  # noqa: E402
 
 RULE_IDS = ("RS001", "RS002", "RS003", "RS004", "RS005", "RS006", "RS007",
-            "RS008")
+            "RS008",
+            # flow rules (tools/replint/flow/, tested in test_replint_flow)
+            "RS010", "RS011", "RS012", "RS013", "RS014", "RS015")
 
 
 def lint_snippet(tmp_path, relpath: str, source: str):

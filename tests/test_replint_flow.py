@@ -1,0 +1,548 @@
+"""Tests for the replint flow layer (RS010–RS015).
+
+Every rule gets a seeded *bad* fixture asserting the exact
+``(rule, file, line)`` anchor and a *good* twin that must stay silent —
+the good twins mirror the real engines (factory-built shard_map bodies,
+tuple-unpacked axis names, host-side decode after the compiled call),
+so these tests also pin the resolution machinery: the compat-shim
+spelling of ``shard_map``, factory param binding, package re-export
+imports, and the authoritative ``REQUIRED_STATS`` read from the linted
+program itself. The final tests self-lint the real tree (zero
+unsuppressed findings — satellite 1's sweep, kept honest forever) and
+cover the ``--baseline`` escape hatch and the JSON ``schema_version``.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:  # tools/ is a repo-root package
+    sys.path.insert(0, str(REPO_ROOT))
+
+from tools.replint import lint_paths, lint_source  # noqa: E402
+from tools.replint.cli import main as replint_main  # noqa: E402
+from tools.replint.flow import build_program  # noqa: E402
+
+
+def lint_tree(tmp_path, files):
+    """Write {relpath: source} under a fake repo root and lint it all."""
+    for rel, src in files.items():
+        f = tmp_path / rel
+        f.parent.mkdir(parents=True, exist_ok=True)
+        f.write_text(textwrap.dedent(src))
+    findings, _, n_suppressed = lint_paths([tmp_path], root=tmp_path)
+    return findings, n_suppressed
+
+
+def hits(findings, rule):
+    return [(f.rule, f.path, f.line) for f in findings if f.rule == rule]
+
+
+# the compat shim, minimal: enough for import resolution in fixtures
+SHIM = """\
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+def shard_map(f, *, mesh, in_specs, out_specs, **kwargs):
+    return f
+
+def cpu_device_mesh(n, axis="p"):
+    return Mesh(np.array(jax.devices()[:n]), (axis,))
+"""
+
+
+# ---------------------------------------------------------------------------
+# RS010 — collective axis vs enclosing mesh
+# ---------------------------------------------------------------------------
+
+def test_rs010_wrong_axis_through_factory(tmp_path):
+    """Seeded regression: 1D-style factory body ppermutes over an axis
+    the mesh never declared. The axis name reaches the collective via a
+    factory parameter default — exactly the real compile_ring shape."""
+    files = {
+        "src/repro/compat.py": SHIM,
+        "src/repro/core/spgemm_x_device.py": """\
+            import jax
+            from ..compat import shard_map, cpu_device_mesh
+
+            def _make_step(axis):
+                def body(a):
+                    return jax.lax.ppermute(
+                        a, "q", perm=[(j, (j - 1) % 4) for j in range(4)])
+                return body
+
+            def compile_thing(plan, axis="p"):
+                mesh = cpu_device_mesh(4, axis)
+                body = _make_step(axis)
+                return jax.jit(shard_map(body, mesh=mesh,
+                                         in_specs=None, out_specs=None))
+            """,
+    }
+    findings, _ = lint_tree(tmp_path, files)
+    assert hits(findings, "RS010") == \
+        [("RS010", "src/repro/core/spgemm_x_device.py", 6)]
+
+
+def test_rs010_good_factory_axis_resolves(tmp_path):
+    """The same shape with the axis routed through the factory param is
+    clean — the resolver must bind call-site args to factory params."""
+    files = {
+        "src/repro/compat.py": SHIM,
+        "src/repro/core/spgemm_x_device.py": """\
+            import jax
+            from ..compat import shard_map, cpu_device_mesh
+
+            def _make_step(axis):
+                def body(a):
+                    return jax.lax.ppermute(
+                        a, axis, perm=[(j, (j - 1) % 4) for j in range(4)])
+                return body
+
+            def compile_thing(plan, axis="p"):
+                mesh = cpu_device_mesh(4, axis)
+                body = _make_step(axis)
+                return jax.jit(shard_map(body, mesh=mesh,
+                                         in_specs=None, out_specs=None))
+            """,
+    }
+    findings, _ = lint_tree(tmp_path, files)
+    assert hits(findings, "RS010") == []
+
+
+def test_rs010_tuple_unpacked_axes(tmp_path):
+    """2D-style: axes arrive as a tuple default and are tuple-unpacked
+    inside the factory; one of the three collectives uses a bad name."""
+    files = {
+        "src/repro/compat.py": SHIM,
+        "src/repro/core/summa_x_device.py": """\
+            import jax
+            import numpy as np
+            from jax.sharding import Mesh
+            from ..compat import shard_map
+
+            def _make_body(axes):
+                ax_r, ax_c = axes
+                def body(a):
+                    g = jax.lax.all_gather(a, ax_c)
+                    s = jax.lax.psum(g, "gz")
+                    return jax.lax.psum(s, ax_r)
+                return body
+
+            def compile_thing(plan, axes=("gr", "gc")):
+                mesh = Mesh(np.zeros((2, 2)), axes)
+                body = _make_body(axes)
+                return jax.jit(shard_map(body, mesh=mesh,
+                                         in_specs=None, out_specs=None))
+            """,
+    }
+    findings, _ = lint_tree(tmp_path, files)
+    assert hits(findings, "RS010") == \
+        [("RS010", "src/repro/core/summa_x_device.py", 10)]
+
+
+def test_rs010_unresolvable_mesh_is_silent(tmp_path):
+    """A caller-supplied mesh has no visible constructor: the rule must
+    stay silent rather than guess (zero-false-positive policy)."""
+    files = {
+        "src/repro/compat.py": SHIM,
+        "src/repro/core/x_device.py": """\
+            import jax
+            from ..compat import shard_map
+
+            def compile_thing(mesh):
+                def body(a):
+                    return jax.lax.psum(a, "whatever")
+                return jax.jit(shard_map(body, mesh=mesh,
+                                         in_specs=None, out_specs=None))
+            """,
+    }
+    findings, _ = lint_tree(tmp_path, files)
+    assert hits(findings, "RS010") == []
+
+
+# ---------------------------------------------------------------------------
+# RS011 — ppermute permutation soundness
+# ---------------------------------------------------------------------------
+
+def test_rs011_literal_non_bijection(tmp_path):
+    files = {
+        "src/repro/core/permy.py": """\
+            import jax
+
+            def bad(x):
+                return jax.lax.ppermute(x, "p", perm=[(0, 1), (1, 1)])
+
+            def good(x):
+                return jax.lax.ppermute(x, "p", perm=[(0, 1), (1, 0)])
+            """,
+    }
+    findings, _ = lint_tree(tmp_path, files)
+    assert hits(findings, "RS011") == \
+        [("RS011", "src/repro/core/permy.py", 4)]
+
+
+def test_rs011_rotation_modulus_mismatch(tmp_path):
+    """Seeded regression: the canonical ring rotation but with a modulus
+    that differs from the ring size. The canonical form itself (the
+    spgemm_1d_device.py:426 shape) must pass."""
+    files = {
+        "src/repro/core/permy.py": """\
+            import jax
+
+            def bad(x, P):
+                return jax.lax.ppermute(
+                    x, "p", perm=[(j, (j - 1) % 8) for j in range(4)])
+
+            def canonical(x, P, s):
+                perm = [(j, (j - s) % P) for j in range(P)]
+                return jax.lax.ppermute(x, "p", perm=perm)
+            """,
+    }
+    findings, _ = lint_tree(tmp_path, files)
+    assert hits(findings, "RS011") == \
+        [("RS011", "src/repro/core/permy.py", 4)]
+
+
+# ---------------------------------------------------------------------------
+# RS012 — host-device sync inside traced code
+# ---------------------------------------------------------------------------
+
+def test_rs012_sync_in_shard_map_body(tmp_path):
+    """Seeded regression: np.asarray / .item() / float() inside a
+    shard_map body flag; the post-`fn(*args)` host-side decode —
+    the real engines' run_device_spgemm shape — must NOT."""
+    files = {
+        "src/repro/compat.py": SHIM,
+        "src/repro/core/syncy_device.py": """\
+            import numpy as np
+            import jax
+            from ..compat import shard_map, cpu_device_mesh
+
+            def compile_bad(plan):
+                mesh = cpu_device_mesh(2)
+                def body(a):
+                    host = np.asarray(a)
+                    v = a.item()
+                    return float(v)
+                return jax.jit(shard_map(body, mesh=mesh,
+                                         in_specs=None, out_specs=None))
+
+            def run(plan, args):
+                fn = compile_bad(plan)
+                out = fn(*args)
+                return np.asarray(out)
+            """,
+    }
+    findings, _ = lint_tree(tmp_path, files)
+    assert hits(findings, "RS012") == [
+        ("RS012", "src/repro/core/syncy_device.py", 8),
+        ("RS012", "src/repro/core/syncy_device.py", 9),
+        ("RS012", "src/repro/core/syncy_device.py", 10),
+    ]
+
+
+def test_rs012_transitive_helper_in_trace(tmp_path):
+    """The sync hides one call away from the jit body: the traced
+    closure must follow resolvable call edges."""
+    files = {
+        "src/repro/helper.py": """\
+            import numpy as np
+
+            def decode(x):
+                return np.asarray(x)
+            """,
+        "src/repro/kern.py": """\
+            import jax
+            from .helper import decode
+
+            @jax.jit
+            def run(x):
+                return decode(x)
+            """,
+    }
+    findings, _ = lint_tree(tmp_path, files)
+    assert hits(findings, "RS012") == \
+        [("RS012", "src/repro/helper.py", 4)]
+
+
+# ---------------------------------------------------------------------------
+# RS013 — interprocedural semiring-identity taint
+# ---------------------------------------------------------------------------
+
+def test_rs013_helper_laundered_zero(tmp_path):
+    """Seeded regression: a literal 0.0 reaching jnp.full's fill through
+    a local binding (line 9) and through a helper's parameter (line 10).
+    RS003 sees neither."""
+    files = {
+        "src/repro/core/painty_device.py": """\
+            import jax.numpy as jnp
+
+            def _pad(shape, dtype, fill):
+                return jnp.full(shape, fill, dtype)
+
+            def build_tiles(shape, dtype):
+                z = 0.0
+                a = jnp.full(shape, z)
+                return _pad(shape, dtype, 0.0), a
+            """,
+    }
+    findings, _ = lint_tree(tmp_path, files)
+    assert hits(findings, "RS013") == [
+        ("RS013", "src/repro/core/painty_device.py", 8),
+        ("RS013", "src/repro/core/painty_device.py", 9),
+    ]
+
+
+def test_rs013_integral_dtype_and_semiring_zero_are_clean(tmp_path):
+    files = {
+        "src/repro/core/painty_device.py": """\
+            import jax.numpy as jnp
+
+            def _pad(shape, dtype, fill):
+                return jnp.full(shape, fill, dtype)
+
+            def build_tiles(shape, semiring):
+                idx = jnp.full(shape, 0, dtype=jnp.int32)
+                ok = _pad(shape, jnp.int32, 0)
+                good = _pad(shape, jnp.float32, semiring.zero)
+                return idx, ok, good
+            """,
+    }
+    findings, _ = lint_tree(tmp_path, files)
+    # the helper pins no dtype for the int case, so only the clearly
+    # integral direct fill is exempt; semiring.zero is never tainted
+    assert ("RS013", "src/repro/core/painty_device.py", 7) \
+        not in hits(findings, "RS013")
+    assert ("RS013", "src/repro/core/painty_device.py", 9) \
+        not in hits(findings, "RS013")
+
+
+def test_rs013_out_of_scope_module_is_silent(tmp_path):
+    files = {
+        "src/repro/models/filly.py": """\
+            import jax.numpy as jnp
+
+            def pad(shape):
+                z = 0.0
+                return jnp.full(shape, z)
+            """,
+    }
+    findings, _ = lint_tree(tmp_path, files)
+    assert hits(findings, "RS013") == []
+
+
+# ---------------------------------------------------------------------------
+# RS014 — retrace / cache hazards
+# ---------------------------------------------------------------------------
+
+def test_rs014_dict_capture_and_one_shot_jit(tmp_path):
+    """Seeded regression: a closure passed to shard_map capturing a dict
+    local, plus an immediately-invoked jit. Tuple-unpack captures (the
+    real 2D body's `bs, layers = plan.bs, plan.layers`) must stay clean."""
+    files = {
+        "src/repro/compat.py": SHIM,
+        "src/repro/core/cachey.py": """\
+            import jax
+            from ..compat import shard_map
+
+            def compile_bad(plan, mesh):
+                opts = {"a": 1}
+                bs, layers = plan.bs, plan.layers
+                def body(x):
+                    return x * opts["a"] + bs + layers
+                return jax.jit(shard_map(body, mesh=mesh,
+                                         in_specs=None, out_specs=None))
+
+            def once(f, x):
+                return jax.jit(f)(x)
+            """,
+    }
+    findings, _ = lint_tree(tmp_path, files)
+    got = hits(findings, "RS014")
+    assert ("RS014", "src/repro/core/cachey.py", 9) in got
+    assert ("RS014", "src/repro/core/cachey.py", 13) in got
+    assert len(got) == 2    # the tuple-unpack captures did not flag
+
+
+def test_rs014_tests_are_exempt(tmp_path):
+    files = {
+        "tests/test_thing.py": """\
+            import jax
+
+            def test_once(f, x):
+                return jax.jit(f)(x)
+            """,
+    }
+    findings, _ = lint_tree(tmp_path, files)
+    assert hits(findings, "RS014") == []
+
+
+# ---------------------------------------------------------------------------
+# RS015 — stats-surface completeness
+# ---------------------------------------------------------------------------
+
+def test_rs015_missing_key_against_program_required_stats(tmp_path):
+    """The authoritative key list comes from the linted program's own
+    device_common.REQUIRED_STATS — not from a hardcoded fallback."""
+    files = {
+        "src/repro/core/device_common.py": """\
+            REQUIRED_STATS = ("alpha", "beta")
+            """,
+        "src/repro/core/stats_device.py": """\
+            from .device_common import REQUIRED_STATS
+
+            def build_x_plan(A):
+                return Plan(stats=dict(alpha=1))
+
+            def build_y_plan(A):
+                stats = {"alpha": 1, "beta": 2}
+                return Plan(stats=stats)
+
+            def build_z_plan(A):
+                return build_y_plan(A)
+
+            class Plan:
+                def __init__(self, stats):
+                    self.stats = stats
+            """,
+    }
+    findings, _ = lint_tree(tmp_path, files)
+    got = hits(findings, "RS015")
+    assert got == [("RS015", "src/repro/core/stats_device.py", 4)]
+    msg = [f.message for f in findings if f.rule == "RS015"][0]
+    assert "beta" in msg and "alpha" not in msg
+
+
+# ---------------------------------------------------------------------------
+# suppressions, single-file mode, whole-tree sweep
+# ---------------------------------------------------------------------------
+
+def test_flow_finding_suppressible_like_any_other(tmp_path):
+    files = {
+        "src/repro/core/permy.py": """\
+            import jax
+
+            def bad(x):
+                return jax.lax.ppermute(  # replint: off=RS011 fixture
+                    x, "p", perm=[(0, 1), (1, 1)])
+            """,
+    }
+    findings, n_suppressed = lint_tree(tmp_path, files)
+    assert hits(findings, "RS011") == []
+    assert n_suppressed == 1
+
+
+def test_lint_source_builds_single_file_program():
+    src = textwrap.dedent("""\
+        import jax
+
+        def bad(x):
+            return jax.lax.ppermute(x, "p", perm=[(0, 0), (1, 0)])
+        """)
+    findings, _ = lint_source(src, "src/repro/core/one.py")
+    assert [(f.rule, f.line) for f in findings
+            if f.rule == "RS011"] == [("RS011", 4)]
+
+
+def test_real_tree_self_lints_clean():
+    """Satellite 1, kept honest: the shipped tree has zero unsuppressed
+    findings under all rules including the flow layer."""
+    findings, n_files, _ = lint_paths(
+        [REPO_ROOT / "src", REPO_ROOT / "tests", REPO_ROOT / "benchmarks"],
+        root=REPO_ROOT)
+    assert findings == [], [f"{f.path}:{f.line} {f.rule}" for f in findings]
+    assert n_files > 50
+
+
+def test_real_tree_discovers_device_engine_sites():
+    """The flow layer must actually see the engines: both shard_map
+    bodies resolve through their factories with the right mesh axes."""
+    sources = []
+    for f in sorted((REPO_ROOT / "src").rglob("*.py")):
+        sources.append((f.relative_to(REPO_ROOT).as_posix(), f.read_text()))
+    program = build_program(sources)
+    sites = program.analysis().visitor.sites
+    by_path = {}
+    for s in sites:
+        if s.kind == "shard_map" and s.mesh_axes:
+            by_path[s.module.path] = s.mesh_axes
+    assert by_path["src/repro/core/spgemm_1d_device.py"] == {"p"}
+    assert by_path["src/repro/core/spgemm_2d_device.py"] == \
+        {"gr", "gc", "gl"}
+
+
+# ---------------------------------------------------------------------------
+# CLI: --baseline and JSON schema_version
+# ---------------------------------------------------------------------------
+
+def _write_bad_tree(tmp_path):
+    f = tmp_path / "src/repro/core/permy.py"
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(textwrap.dedent("""\
+        import jax
+
+        def bad(x):
+            return jax.lax.ppermute(x, "p", perm=[(0, 1), (1, 1)])
+        """))
+    return f
+
+
+def test_cli_baseline_filters_known_findings(tmp_path, capsys):
+    _write_bad_tree(tmp_path)
+    rc = replint_main(["--root", str(tmp_path), "--format", "json", "src"])
+    report = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert report["schema_version"] == 2
+    assert len(report["findings"]) == 1
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps(report))
+
+    rc = replint_main(["--root", str(tmp_path), "--format", "json",
+                       "--baseline", str(baseline), "src"])
+    filtered = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert filtered["findings"] == []
+    assert filtered["baselined"] == 1
+
+
+def test_cli_baseline_survives_line_shift(tmp_path, capsys):
+    """Line numbers are not part of the baseline triple: inserting a
+    line above a known finding must not resurrect it."""
+    f = _write_bad_tree(tmp_path)
+    rc = replint_main(["--root", str(tmp_path), "--format", "json", "src"])
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(capsys.readouterr().out)
+    assert rc == 1
+
+    f.write_text("# shifted\n" + f.read_text())
+    rc = replint_main(["--root", str(tmp_path),
+                       "--baseline", str(baseline), "src"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "1 baselined" in out
+
+
+def test_cli_rejects_bad_baseline(tmp_path, capsys):
+    _write_bad_tree(tmp_path)
+    bad = tmp_path / "nope.json"
+    bad.write_text("not json")
+    rc = replint_main(["--root", str(tmp_path),
+                       "--baseline", str(bad), "src"])
+    assert rc == 2
+
+
+def test_text_output_is_path_line_col(tmp_path, capsys):
+    _write_bad_tree(tmp_path)
+    rc = replint_main(["--root", str(tmp_path), "src"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    first = out.splitlines()[0]
+    # path:line:col with a 1-indexed column, then the rule id
+    assert first.startswith("src/repro/core/permy.py:4:")
+    prefix, _, rest = first.partition(": ")
+    assert prefix.split(":")[2].isdigit()
+    assert rest.startswith("RS011")

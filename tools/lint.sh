@@ -2,10 +2,32 @@
 # Invariant lint — replint over everything tier-1 covers.
 #
 #   tools/lint.sh                      # src tests benchmarks
-#   tools/lint.sh --format json src    # extra replint args pass through
+#   tools/lint.sh --changed            # only files changed vs main
+#   tools/lint.sh --baseline b.json    # extra replint args pass through
+#
+# --changed lints the Python files touched relative to the merge-base
+# with main (staged, unstaged and untracked), for a fast pre-commit
+# loop; the interprocedural rules still see the whole src/ tree, so a
+# changed helper is checked against its unchanged callers. With no
+# changed Python files it exits 0 without invoking replint.
 #
 # Exits nonzero on any finding; see tools/replint/README.md for the rule
 # list and the suppression syntax.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--changed" ]]; then
+    shift
+    base="$(git merge-base HEAD main 2>/dev/null || echo HEAD)"
+    mapfile -t changed < <(
+        { git diff --name-only --diff-filter=d "$base" -- '*.py';
+          git ls-files --others --exclude-standard -- '*.py'; } \
+        | sort -u | while IFS= read -r f; do [[ -f "$f" ]] && echo "$f"; done)
+    if [[ ${#changed[@]} -eq 0 ]]; then
+        echo "replint: no changed Python files vs $(git rev-parse --short "$base")"
+        exit 0
+    fi
+    exec python -m tools.replint "$@" "${changed[@]}"
+fi
+
 exec python -m tools.replint "$@"

@@ -2,6 +2,7 @@
 
     python -m tools.replint src tests benchmarks
     python -m tools.replint --format json src
+    python -m tools.replint --baseline known.json src
     python -m tools.replint --list-rules
 
 Exit status: 0 = clean, 1 = findings, 2 = bad invocation. Paths may be
@@ -9,19 +10,34 @@ files or directories; directories are walked for ``*.py``. ``--root``
 anchors the relative paths findings (and scope/allowlist globs) are
 matched against — it defaults to the cwd, which for the shipped entry
 points (``tools/lint.sh`` / ``tools/verify.sh``) is the repo root.
+
+``--baseline`` takes a prior ``--format json`` report and drops every
+current finding whose ``(rule, path, message)`` triple appears in it —
+the escape hatch for landing a new rule against a tree with known
+findings without blanket suppressions. Line numbers are deliberately
+NOT part of the triple, so unrelated edits shifting a known finding do
+not resurrect it.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Set, Tuple
 
-from .core import all_rules, lint_paths
+from .core import Finding, all_rules, lint_paths
 from .report import render_json, render_rules, render_text
 
 DEFAULT_PATHS = ("src", "tests", "benchmarks")
+
+
+def load_baseline(path: Path) -> Set[Tuple[str, str, str]]:
+    """``(rule, path, message)`` triples from a ``--format json`` report."""
+    data = json.loads(path.read_text(encoding="utf-8"))
+    return {(f["rule"], f["path"], f["message"])
+            for f in data.get("findings", ())}
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -35,6 +51,9 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="directory scope globs and reported paths are "
                          "relative to (default: cwd)")
     ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--baseline", default=None, metavar="JSON",
+                    help="drop findings whose (rule, path, message) "
+                         "appear in this prior --format json report")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rule registry and exit")
     args = ap.parse_args(argv)
@@ -55,8 +74,31 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
               file=sys.stderr)
         return 2
 
+    baseline: Set[Tuple[str, str, str]] = set()
+    if args.baseline:
+        bpath = Path(args.baseline)
+        if not bpath.is_file():
+            print(f"replint: --baseline {bpath} is not a file",
+                  file=sys.stderr)
+            return 2
+        try:
+            baseline = load_baseline(bpath)
+        except (ValueError, KeyError, TypeError) as e:
+            print(f"replint: --baseline {bpath} is not a replint JSON "
+                  f"report: {e}", file=sys.stderr)
+            return 2
+
     findings, n_files, n_suppressed = lint_paths(
         [Path(p) for p in args.paths], root=root)
+    n_baselined = 0
+    if baseline:
+        kept = []
+        for f in findings:
+            if (f.rule, f.path, f.message) in baseline:
+                n_baselined += 1
+            else:
+                kept.append(f)
+        findings = kept
     render = render_json if args.format == "json" else render_text
-    print(render(findings, n_files, n_suppressed))
+    print(render(findings, n_files, n_suppressed, n_baselined))
     return 1 if findings else 0

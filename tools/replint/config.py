@@ -123,3 +123,65 @@ RS008_SCOPE = (
 
 # exception names considered catch-alls when named in an except clause
 CATCH_ALL_EXC_NAMES = frozenset({"Exception", "BaseException"})
+
+# ---------------------------------------------------------------------------
+# flow rules (RS010–RS015) — interprocedural layer, tools/replint/flow/
+# ---------------------------------------------------------------------------
+
+# Mesh constructors the context visitor understands:
+#   ctor name -> (axes arg position, axes kwarg name, implicit default)
+# `cpu_device_mesh(n, axis="p")` declares one axis (default "p");
+# `device_grid_mesh(shape, axes)` / raw `Mesh(devices, axes)` declare a
+# tuple of axes with no default.
+MESH_CONSTRUCTORS = {
+    "cpu_device_mesh": (1, "axis", "p"),
+    "device_grid_mesh": (1, "axes", None),
+    "Mesh": (1, "axes", None),
+}
+
+# RS010 — collectives whose axis argument must name a declared mesh axis:
+#   callee terminal name -> positional index of the axis argument
+# (the kwarg spellings `axis_name` / `axis` are also recognized).
+COLLECTIVE_AXIS_ARG = {
+    "ppermute": 1,
+    "all_gather": 1,
+    "all_to_all": 1,
+    "psum": 1,
+    "pmax": 1,
+    "pmin": 1,
+    "pmean": 1,
+    "axis_index": 0,
+    "jnp_axis_reduce": 1,
+}
+
+# RS012 — method calls that force a host-device sync when the receiver is
+# a tracer, and numpy leaves that are pure metadata (never touch device
+# buffers) and therefore stay legal inside traced code.
+RS012_SYNC_METHODS = frozenset({"item", "block_until_ready"})
+RS012_TRACE_SAFE_NUMPY = frozenset({"dtype", "iinfo", "finfo"})
+
+# RS013 — keyword names that put their value in a semiring-identity
+# position, and the call-graph depth the taint summaries explore.
+RS013_FILL_KWARGS = frozenset({"fill", "fill_value", "constant_values"})
+RS013_MAX_DEPTH = 3
+
+# RS014 — callables whose function argument gets trace-compiled (and so
+# bakes its closure into the executable cache key). Tests are exempt:
+# pinning a one-shot jit there is a legitimate idiom.
+RS014_COMPILE_TARGETS = frozenset({
+    "jit", "shard_map", "compile_ring", "compile_summa", "compile_summa3d",
+})
+RS014_ALLOW = ("tests/*.py", "tests/**/*.py")
+
+# RS015 — device plan builders must assign the full shared stats surface
+# on every return path. The authoritative key list is read from
+# `device_common.REQUIRED_STATS` in the linted program itself; the
+# fallback below only applies when that module is not part of the lint
+# set (e.g. single-file fixtures).
+RS015_SCOPE = ("src/repro/core/*_device.py",)
+RS015_BUILDER_GLOB = "build_*_plan"
+DEVICE_COMMON_MODULE = "repro.core.device_common"
+REQUIRED_STATS_FALLBACK = (
+    "comm_bytes_planned", "comm_bytes_padded", "messages",
+    "dense_flops", "plan_seconds",
+)

@@ -66,6 +66,10 @@ class FileContext:
     tree: ast.AST
     # line -> (rule ids suppressed on that line, justification text)
     suppressions: Dict[int, Tuple[frozenset, str]]
+    # whole-program view for the flow rules (flow.loader.Program); None
+    # means "single file only" and the flow rules build a one-file
+    # program on demand
+    program: Optional[object] = None
 
     def finding(self, rule_id: str, node: ast.AST, message: str) -> Finding:
         return Finding(rule=rule_id, path=self.path,
@@ -106,8 +110,9 @@ def rule(cls):
 
 def all_rules() -> List[Rule]:
     # import for the registration side effect; cycle-safe because rules.py
-    # imports only core symbols defined above
+    # (and flow.rules_flow) import only core symbols defined above
     from . import rules  # noqa: F401
+    from .flow import rules_flow  # noqa: F401
     return list(_REGISTRY)
 
 
@@ -164,7 +169,8 @@ def _relpath(f: Path, root: Path) -> str:
 
 
 def lint_source(source: str, path: str,
-                rules: Optional[Sequence[Rule]] = None
+                rules: Optional[Sequence[Rule]] = None,
+                program: Optional[object] = None
                 ) -> Tuple[List[Finding], int]:
     """Lint one in-memory file; returns (findings, n_suppressed)."""
     rules = all_rules() if rules is None else rules
@@ -176,7 +182,8 @@ def lint_source(source: str, path: str,
                         f"file does not parse: {e.msg}")], 0
 
     ctx = FileContext(path=path, source=source, tree=tree,
-                      suppressions=parse_suppressions(source))
+                      suppressions=parse_suppressions(source),
+                      program=program)
     findings: List[Finding] = []
     suppressed = 0
     for r in rules:
@@ -201,22 +208,45 @@ def lint_source(source: str, path: str,
 def lint_paths(paths: Sequence[Path], root: Optional[Path] = None,
                rules: Optional[Sequence[Rule]] = None
                ) -> Tuple[List[Finding], int, int]:
-    """Lint files/trees; returns (findings, n_files, n_suppressed)."""
+    """Lint files/trees; returns (findings, n_files, n_suppressed).
+
+    All lint-set files plus the root's ``src/`` tree are loaded into ONE
+    whole-program view first, so the interprocedural rules resolve
+    cross-module edges (factories, helpers, the compat shim) even when
+    only a subset of files is being linted — and the expensive flow
+    analysis runs once per invocation, not once per file.
+    """
     root = Path.cwd() if root is None else Path(root)
     rules = all_rules() if rules is None else rules
     findings: List[Finding] = []
     n_files = 0
     n_suppressed = 0
+    lint_set: List[Tuple[str, Path]] = []
+    sources: Dict[str, str] = {}
     for f in iter_python_files(paths, root):
         n_files += 1
         rel = _relpath(f, root)
+        lint_set.append((rel, f))
         try:
-            source = f.read_text(encoding="utf-8")
+            sources[rel] = f.read_text(encoding="utf-8")
         except (OSError, UnicodeDecodeError) as e:
             findings.append(Finding(PARSE_ERROR_ID, rel, 1, 0,
                                     f"unreadable: {e}"))
-            continue
-        got, sup = lint_source(source, rel, rules)
+    src_tree = root / "src"
+    if src_tree.is_dir():
+        for f in iter_python_files([src_tree], root):
+            rel = _relpath(f, root)
+            if rel not in sources:
+                try:
+                    sources[rel] = f.read_text(encoding="utf-8")
+                except (OSError, UnicodeDecodeError):
+                    pass
+    from .flow import build_program
+    program = build_program(sorted(sources.items()))
+    for rel, f in lint_set:
+        if rel not in sources:
+            continue        # unreadable, already reported
+        got, sup = lint_source(sources[rel], rel, rules, program=program)
         findings.extend(got)
         n_suppressed += sup
     findings.sort(key=Finding.sort_key)

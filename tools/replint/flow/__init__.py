@@ -1,0 +1,20 @@
+"""replint.flow — the interprocedural analysis layer.
+
+Stdlib-``ast`` only, like the rest of replint. The pipeline
+(``tools/replint/README.md`` has the architecture note):
+
+    loader.py    modules + symbol tables (defs, imports, assignments)
+    callgraph.py resolvable call edges + transitive traced closure
+    contexts.py  shard_map/jit traced-body discovery and abstract
+                 value resolution (axis names, mesh declarations)
+    taint.py     forward zero-literal taint across call edges
+    rules_flow.py RS010-RS015 on top of the shared FlowAnalysis
+
+Everything is *whole-program*: ``core.lint_paths`` builds one
+:class:`~tools.replint.flow.loader.Program` over the lint set plus the
+full ``src/`` tree and hands it to every rule through
+``FileContext.program``, so linting a single changed file still sees
+cross-module call edges (``--changed`` mode stays sound).
+"""
+
+from .loader import Program, build_program  # noqa: F401

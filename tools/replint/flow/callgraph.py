@@ -1,0 +1,58 @@
+"""flow.callgraph — resolvable call edges and the traced closure.
+
+The call graph is deliberately partial: an edge exists only where the
+callee is statically resolvable (a plain name or module-alias attribute
+that :meth:`~.loader.Program.resolve_func` can follow, including
+function-level imports — ``run_schedule``'s lazy kernel import still
+resolves because the loader merges all import statements per module).
+Method calls on objects are not followed; for the traced-region rules
+that is the safe direction (an unresolvable callee is simply not
+explored, never flagged).
+
+:func:`traced_closure` expands a set of root bodies (the shard_map/jit
+bodies from :mod:`.contexts`) to everything that executes during a
+trace: nested defs of a traced function (they run when called at trace
+time — and in this tree they always are) plus every resolvable callee,
+transitively, with a cycle guard.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from .loader import FuncInfo, Program
+
+
+def callees(program: Program, fi: FuncInfo) -> List[Tuple[ast.Call,
+                                                          FuncInfo]]:
+    """Resolvable (call node, callee FuncInfo) pairs in ``fi``'s body."""
+    out: List[Tuple[ast.Call, FuncInfo]] = []
+    for n in fi.own_nodes():
+        if isinstance(n, ast.Call):
+            target = program.resolve_func(fi.module, n.func, scope=fi)
+            if target is not None and target is not fi:
+                out.append((n, target))
+    return out
+
+
+def traced_closure(program: Program,
+                   roots: Iterable[Tuple[FuncInfo, str]]
+                   ) -> Dict[FuncInfo, str]:
+    """Map every function reachable from the traced roots to a short
+    human-readable provenance string (used in RS012 messages)."""
+    seen: Dict[FuncInfo, str] = {}
+    queue: List[Tuple[FuncInfo, str]] = list(roots)
+    while queue:
+        fi, why = queue.pop()
+        if fi in seen:
+            continue
+        seen[fi] = why
+        for nested in fi.nested.values():
+            queue.append((nested, why))
+        for _, callee in callees(program, fi):
+            if callee not in seen:
+                queue.append((callee,
+                              f"{why} -> {callee.qualname}"
+                              if len(why) < 200 else why))
+    return seen

@@ -1,0 +1,425 @@
+"""flow.contexts — traced-body discovery and abstract value resolution.
+
+The context visitor answers two questions the syntactic rules cannot:
+
+  1. *Which functions execute under a trace?* Every ``shard_map(body,
+     mesh=...)`` / ``jax.jit(fn)`` call site (including the
+     ``repro.compat.shard_map`` shim and ``@functools.partial(jax.jit,
+     ...)`` decorators) is located, and its body argument resolved —
+     directly (a nested def / top-level def) or through a factory call
+     (``body = _make_step_fn(plan, axis, ...)`` resolves to the
+     factory's returned nested def, with the factory's params bound to
+     abstract values of the call-site arguments).
+
+  2. *What does this expression statically evaluate to?* A tiny
+     abstract domain over axis names: string literals, tuples of
+     strings, and :data:`~.loader.UNKNOWN`. Resolution follows the
+     lexical frame chain (body locals → factory params/locals → call
+     site → module constants), tuple-unpack assignments
+     (``ax_r, ax_c, ax_l = axes``) and parameter defaults, and gives up
+     (→ UNKNOWN) rather than guess — the flow rules only flag when both
+     sides of a comparison resolve fully, so an UNKNOWN never becomes a
+     false positive.
+
+Mesh axis declarations are read off the known constructors
+(``cpu_device_mesh`` / ``device_grid_mesh`` / raw ``Mesh``, see
+``config.MESH_CONSTRUCTORS``): the axes of any constructor call bound
+to the shard_map site's ``mesh`` argument in an enclosing scope.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from .. import config
+from .loader import (OPAQUE, UNKNOWN, FuncInfo, ModuleInfo, Program,
+                     own_walk)
+
+Value = object          # str | Tuple[str, ...] | UNKNOWN
+ValueSet = FrozenSet[Value]
+
+
+@dataclasses.dataclass
+class Frame:
+    """One lexical scope on a resolution chain.
+
+    ``func`` is None for module scope. ``bindings`` carry abstract
+    values for parameters bound at a (factory) call site — they take
+    precedence over parameter defaults.
+    """
+    func: Optional[FuncInfo]
+    module: ModuleInfo
+    bindings: Dict[str, ValueSet] = dataclasses.field(default_factory=dict)
+
+
+Frames = Tuple[Frame, ...]
+
+
+@dataclasses.dataclass
+class TracedSite:
+    """One shard_map/jit call site with a statically-resolved body."""
+    kind: str                      # "shard_map" | "jit"
+    site: ast.AST                  # the Call (or decorated FunctionDef)
+    module: ModuleInfo             # module containing the site
+    body: FuncInfo                 # the traced body function
+    frames: Frames                 # resolution chain for names in body
+    mesh_axes: Optional[FrozenSet[str]]   # declared axes, if resolvable
+    where: str                     # human-readable site description
+
+
+# ---------------------------------------------------------------------------
+# abstract value resolution
+# ---------------------------------------------------------------------------
+
+class Resolver:
+    """Value resolution with recursion guard and depth limit."""
+
+    MAX_DEPTH = 12
+
+    def __init__(self, program: Program):
+        self.program = program
+        self._active: Set[Tuple[int, str]] = set()
+
+    def resolve(self, expr: Optional[ast.AST], frames: Frames,
+                depth: int = MAX_DEPTH) -> ValueSet:
+        if expr is None or depth <= 0:
+            return frozenset({UNKNOWN})
+        if isinstance(expr, ast.Constant):
+            if isinstance(expr.value, str):
+                return frozenset({expr.value})
+            return frozenset({UNKNOWN})
+        if isinstance(expr, (ast.Tuple, ast.List)):
+            parts: List[str] = []
+            for elt in expr.elts:
+                got = self.resolve(elt, frames, depth - 1)
+                strs = {v for v in got if isinstance(v, str)}
+                if len(strs) != 1 or UNKNOWN in got:
+                    return frozenset({UNKNOWN})
+                parts.append(next(iter(strs)))
+            return frozenset({tuple(parts)})
+        if isinstance(expr, ast.Name):
+            return self._resolve_name(expr.id, frames, depth)
+        if isinstance(expr, ast.Subscript):
+            base = self.resolve(expr.value, frames, depth - 1)
+            idx = expr.slice
+            if isinstance(idx, ast.Constant) and isinstance(idx.value, int):
+                out: Set[Value] = set()
+                for v in base:
+                    if isinstance(v, tuple) and 0 <= idx.value < len(v):
+                        out.add(v[idx.value])
+                    else:
+                        out.add(UNKNOWN)
+                return frozenset(out)
+            return frozenset({UNKNOWN})
+        return frozenset({UNKNOWN})
+
+    def _resolve_name(self, name: str, frames: Frames,
+                      depth: int) -> ValueSet:
+        for i, frame in enumerate(frames):
+            outer = frames[i:]
+            if name in frame.bindings:
+                return frame.bindings[name]
+            fi = frame.func
+            if fi is None:
+                entries = frame.module.assigns.get(name)
+                if entries:
+                    return self._from_entries(entries, outer, depth)
+                continue
+            if not fi.binds(name):
+                continue
+            if name in fi.nested:
+                return frozenset({UNKNOWN})
+            key = (id(fi), name)
+            if key in self._active:
+                return frozenset({UNKNOWN})
+            self._active.add(key)
+            try:
+                vals: Set[Value] = set()
+                entries = fi.assigns.get(name)
+                if entries:
+                    vals |= self._from_entries(entries, outer, depth)
+                if name in fi.params:
+                    default = fi.defaults.get(name)
+                    if default is not None:
+                        # defaults evaluate in the def's enclosing scope
+                        vals |= self.resolve(default, outer[1:] or outer,
+                                             depth - 1)
+                    elif not entries:
+                        vals.add(UNKNOWN)
+                return frozenset(vals) if vals else frozenset({UNKNOWN})
+            finally:
+                self._active.discard(key)
+        return frozenset({UNKNOWN})
+
+    def _from_entries(self, entries, outer: Frames, depth: int) -> ValueSet:
+        vals: Set[Value] = set()
+        for value_expr, index in entries:
+            if value_expr is OPAQUE:
+                vals.add(UNKNOWN)
+                continue
+            got = self.resolve(value_expr, outer, depth - 1)
+            if index is None:
+                vals |= got
+            else:
+                for v in got:
+                    if isinstance(v, tuple) and 0 <= index < len(v):
+                        vals.add(v[index])
+                    else:
+                        vals.add(UNKNOWN)
+        return frozenset(vals)
+
+
+def strings_of(values: ValueSet) -> Tuple[Set[str], bool]:
+    """Flatten a value set to axis-name strings.
+
+    Returns ``(strings, complete)`` — ``complete`` is False when any
+    member failed to resolve (rules must then stay silent).
+    """
+    out: Set[str] = set()
+    complete = True
+    for v in values:
+        if isinstance(v, str):
+            out.add(v)
+        elif isinstance(v, tuple):
+            out.update(v)
+        else:
+            complete = False
+    return out, complete
+
+
+# ---------------------------------------------------------------------------
+# shard_map / jit site discovery
+# ---------------------------------------------------------------------------
+
+def _terminal(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _call_arg(call: ast.Call, pos: int,
+              kwname: Optional[str]) -> Optional[ast.AST]:
+    if kwname is not None:
+        for kw in call.keywords:
+            if kw.arg == kwname:
+                return kw.value
+    if len(call.args) > pos:
+        return call.args[pos]
+    return None
+
+
+class ContextVisitor:
+    """Finds every traced body in the program, with its value frames."""
+
+    def __init__(self, program: Program):
+        self.program = program
+        self.resolver = Resolver(program)
+        self.sites: List[TracedSite] = []
+        self._scan()
+
+    # -- classification -----------------------------------------------------
+
+    def _is_jit_ref(self, mod: ModuleInfo, expr: ast.AST) -> bool:
+        qn = self.program.qualified_name(mod, expr)
+        if qn is not None:
+            return qn == "jax.jit" or qn.endswith(".jit") and \
+                qn.startswith("jax")
+        return _terminal(expr) == "jit" and isinstance(expr, ast.Attribute)
+
+    def _is_shard_map_ref(self, mod: ModuleInfo, expr: ast.AST) -> bool:
+        # the shim (`repro.compat.shard_map`) and any jax spelling both
+        # count; RS002 separately polices which spelling is allowed
+        return _terminal(expr) == "shard_map"
+
+    # -- scan ---------------------------------------------------------------
+
+    def _scan(self) -> None:
+        for mod in self.program.modules:
+            module_frame = Frame(None, mod)
+            for fi in mod.funcs:
+                frames = self._chain(fi, module_frame)
+                for n in fi.own_nodes():
+                    if isinstance(n, ast.Call):
+                        self._visit_call(n, mod, frames)
+                self._visit_decorators(fi, mod, module_frame)
+            # module-level calls (rare, but cheap to cover)
+            for stmt in mod.tree.body:
+                for n in own_walk(stmt):
+                    if isinstance(n, ast.Call):
+                        self._visit_call(n, mod, (module_frame,))
+
+    def _chain(self, fi: FuncInfo, module_frame: Frame) -> Frames:
+        frames: List[Frame] = []
+        cur: Optional[FuncInfo] = fi
+        while cur is not None:
+            frames.append(Frame(cur, fi.module))
+            cur = cur.parent
+        frames.append(module_frame)
+        return tuple(frames)
+
+    def _visit_decorators(self, fi: FuncInfo, mod: ModuleInfo,
+                          module_frame: Frame) -> None:
+        """``@jax.jit`` / ``@functools.partial(jax.jit, ...)`` mark the
+        decorated function itself as traced."""
+        for deco in fi.node.decorator_list:
+            target = deco
+            if isinstance(deco, ast.Call):
+                qn = self.program.qualified_name(mod, deco.func)
+                if qn == "functools.partial" and deco.args:
+                    target = deco.args[0]
+                else:
+                    target = deco.func
+            if self._is_jit_ref(mod, target):
+                outer = (Frame(fi.parent, mod), module_frame) \
+                    if fi.parent else (module_frame,)
+                self.sites.append(TracedSite(
+                    kind="jit", site=fi.node, module=mod, body=fi,
+                    frames=(Frame(fi, mod),) + outer,
+                    mesh_axes=None,
+                    where=f"@jit decorator at {mod.path}:"
+                          f"{fi.node.lineno}"))
+
+    def _visit_call(self, call: ast.Call, mod: ModuleInfo,
+                    frames: Frames) -> None:
+        if self._is_shard_map_ref(mod, call.func):
+            kind = "shard_map"
+            body_expr = _call_arg(call, 0, "f")
+        elif self._is_jit_ref(mod, call.func):
+            kind = "jit"
+            body_expr = _call_arg(call, 0, "fun")
+        else:
+            return
+        if body_expr is None:
+            return
+        resolved = self._resolve_body(body_expr, mod, frames)
+        if resolved is None:
+            return
+        body, body_frames = resolved
+        mesh_axes = None
+        if kind == "shard_map":
+            mesh_expr = _call_arg(call, 1, "mesh")
+            if mesh_expr is not None:
+                mesh_axes = self._mesh_axes(mesh_expr, mod, frames)
+        self.sites.append(TracedSite(
+            kind=kind, site=call, module=mod, body=body,
+            frames=body_frames, mesh_axes=mesh_axes,
+            where=f"{kind} at {mod.path}:{call.lineno}"))
+
+    # -- body resolution ----------------------------------------------------
+
+    def _resolve_body(self, expr: ast.AST, mod: ModuleInfo, frames: Frames,
+                      depth: int = 3
+                      ) -> Optional[Tuple[FuncInfo, Frames]]:
+        if depth <= 0:
+            return None
+        if isinstance(expr, ast.Call):
+            return self._resolve_factory(expr, mod, frames, depth)
+        if not isinstance(expr, (ast.Name, ast.Attribute)):
+            return None
+        # a direct def (nested or top-level or imported)
+        scope = frames[0].func if frames else None
+        fi = self.program.resolve_func(mod, expr, scope)
+        if fi is not None:
+            return fi, (Frame(fi, fi.module),) + self._def_site_frames(fi)
+        # a local name assigned from a factory call
+        if isinstance(expr, ast.Name):
+            for i, frame in enumerate(frames):
+                if frame.func is None or not frame.func.binds(expr.id):
+                    continue
+                for value_expr, index in frame.func.assigns.get(expr.id, ()):
+                    if index is None and isinstance(value_expr, ast.Call):
+                        got = self._resolve_factory(
+                            value_expr, mod, frames[i:], depth)
+                        if got is not None:
+                            return got
+                break
+        return None
+
+    def _def_site_frames(self, fi: FuncInfo) -> Frames:
+        frames: List[Frame] = []
+        cur = fi.parent
+        while cur is not None:
+            frames.append(Frame(cur, fi.module))
+            cur = cur.parent
+        frames.append(Frame(None, fi.module))
+        return tuple(frames)
+
+    def _resolve_factory(self, call: ast.Call, mod: ModuleInfo,
+                         frames: Frames, depth: int
+                         ) -> Optional[Tuple[FuncInfo, Frames]]:
+        scope = frames[0].func if frames else None
+        factory = self.program.resolve_func(mod, call.func, scope)
+        if factory is None:
+            return None
+        bindings: Dict[str, ValueSet] = {}
+        for pos, arg in enumerate(call.args):
+            if pos < len(factory.params):
+                bindings[factory.params[pos]] = \
+                    self.resolver.resolve(arg, frames)
+        for kw in call.keywords:
+            if kw.arg is not None and kw.arg in factory.params:
+                bindings[kw.arg] = self.resolver.resolve(kw.value, frames)
+        factory_frame = Frame(factory, factory.module, bindings)
+        factory_frames = (factory_frame,) + self._def_site_frames(factory)
+        for ret in factory.returns:
+            if ret.value is None:
+                continue
+            if isinstance(ret.value, ast.Name) and \
+                    ret.value.id in factory.nested:
+                body = factory.nested[ret.value.id]
+                return body, (Frame(body, body.module),) + factory_frames
+            if isinstance(ret.value, ast.Call):
+                inner = self._resolve_body(ret.value, factory.module,
+                                           factory_frames, depth - 1)
+                if inner is not None:
+                    return inner
+        return None
+
+    # -- mesh axes ----------------------------------------------------------
+
+    def _mesh_axes(self, expr: ast.AST, mod: ModuleInfo,
+                   frames: Frames) -> Optional[FrozenSet[str]]:
+        """Axes declared by the mesh bound at this site, if derivable.
+
+        The lint semantic is "the mesh the enclosing scope constructs":
+        a caller-supplied mesh (param with no visible constructor) stays
+        unresolvable and the rule is silent for that site.
+        """
+        if isinstance(expr, ast.Call):
+            return self._ctor_axes(expr, frames)
+        if isinstance(expr, ast.Name):
+            axes: Set[str] = set()
+            for i, frame in enumerate(frames):
+                fi = frame.func
+                entries = (fi.assigns.get(expr.id, ()) if fi is not None
+                           else frame.module.assigns.get(expr.id, ()))
+                for value_expr, index in entries:
+                    if index is None and isinstance(value_expr, ast.Call):
+                        got = self._ctor_axes(value_expr, frames[i:])
+                        if got:
+                            axes |= got
+                if fi is not None and fi.binds(expr.id):
+                    break
+                if fi is None:
+                    break
+            return frozenset(axes) if axes else None
+        return None
+
+    def _ctor_axes(self, call: ast.Call,
+                   frames: Frames) -> Optional[FrozenSet[str]]:
+        name = _terminal(call.func)
+        spec = config.MESH_CONSTRUCTORS.get(name)
+        if spec is None:
+            return None
+        pos, kwname, default = spec
+        arg = _call_arg(call, pos, kwname)
+        if arg is None:
+            return frozenset({default}) if default else None
+        strs, complete = strings_of(self.resolver.resolve(arg, frames))
+        if not complete or not strs:
+            return None
+        return frozenset(strs)

@@ -1,0 +1,384 @@
+"""flow.loader — whole-program module loading and symbol tables.
+
+Parses every file once into :class:`ModuleInfo` records (dotted module
+name, top-level defs, merged import-alias map, module-level constant
+assignments) and every function — at any nesting depth, including
+methods — into a :class:`FuncInfo` (params + defaults, local
+assignments with tuple-unpack indices, nested defs, own-body node list
+that excludes nested function subtrees). The :class:`Program` wraps the
+module set with the two resolution primitives every later pass uses:
+
+  * :meth:`Program.qualified_name` — the dotted origin of a Name /
+    Attribute expression (``np.asarray`` → ``numpy.asarray``,
+    ``shard_map`` imported from the shim → ``repro.compat.shard_map``);
+  * :meth:`Program.resolve_func` — the :class:`FuncInfo` a call
+    expression statically refers to, following import aliases and the
+    lexical scope chain (nested defs shadow module scope).
+
+Nothing is imported or executed; a file that does not parse is simply
+absent from the program (the driver reports it as RS999 separately).
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import PurePosixPath
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+
+class _Unknown:
+    """Singleton bottom element of the abstract value domain."""
+
+    _instance: Optional["_Unknown"] = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:
+        return "<unknown>"
+
+
+UNKNOWN = _Unknown()
+
+# assignment entries whose right-hand side cannot be tracked (AugAssign,
+# for-loop targets, `with ... as`) are recorded with this marker so the
+# name still counts as locally bound
+OPAQUE = None
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def module_name_for(relpath: str) -> str:
+    """``src/repro/core/session.py`` → ``repro.core.session``."""
+    parts = list(PurePosixPath(relpath).parts)
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if not parts:
+        return ""
+    leaf = parts[-1]
+    if leaf.endswith(".py"):
+        leaf = leaf[:-3]
+    parts[-1] = leaf
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def own_walk(node: ast.AST) -> Iterator[ast.AST]:
+    """Walk a subtree without descending into nested function defs.
+
+    Lambdas ARE descended into: they cannot contain statements and in
+    this repo they execute at trace time (BlockSpec index maps), so the
+    traced-region rules want to see their calls.
+    """
+    if isinstance(node, _FUNC_NODES):
+        return      # a def as the root is someone else's scope entirely
+    stack: List[ast.AST] = [node]
+    while stack:
+        n = stack.pop()
+        yield n
+        for child in ast.iter_child_nodes(n):
+            if isinstance(child, _FUNC_NODES):
+                continue
+            stack.append(child)
+
+
+class FuncInfo:
+    """Symbol-table entry for one function (def or method, any depth)."""
+
+    __slots__ = ("module", "node", "name", "qualname", "parent", "nested",
+                 "params", "defaults", "vararg", "kwarg", "assigns",
+                 "returns")
+
+    def __init__(self, module: "ModuleInfo", node: ast.AST, qualname: str,
+                 parent: Optional["FuncInfo"]):
+        self.module = module
+        self.node = node
+        self.name = node.name
+        self.qualname = qualname
+        self.parent = parent
+        self.nested: Dict[str, FuncInfo] = {}
+
+        a = node.args
+        pos_named = list(a.posonlyargs) + list(a.args)
+        self.params: List[str] = [x.arg for x in pos_named + list(a.kwonlyargs)]
+        self.defaults: Dict[str, ast.AST] = {}
+        for arg_, d in zip(pos_named[len(pos_named) - len(a.defaults):],
+                           a.defaults):
+            self.defaults[arg_.arg] = d
+        for arg_, d in zip(a.kwonlyargs, a.kw_defaults):
+            if d is not None:
+                self.defaults[arg_.arg] = d
+        self.vararg = a.vararg.arg if a.vararg else None
+        self.kwarg = a.kwarg.arg if a.kwarg else None
+
+        # name -> [(value_expr | OPAQUE, tuple_index | None), ...]
+        self.assigns: Dict[str, List[Tuple[Optional[ast.AST],
+                                           Optional[int]]]] = {}
+        self.returns: List[ast.Return] = []
+        self._index_body()
+
+    def _index_body(self) -> None:
+        for stmt in self.node.body:
+            for n in own_walk(stmt):
+                if isinstance(n, ast.Assign):
+                    for tgt in n.targets:
+                        self._record_target(tgt, n.value)
+                elif isinstance(n, ast.AnnAssign) and n.value is not None:
+                    self._record_target(n.target, n.value)
+                elif isinstance(n, ast.AugAssign):
+                    self._record_target(n.target, None)
+                elif isinstance(n, (ast.For, ast.AsyncFor)):
+                    self._record_target(n.target, None)
+                elif isinstance(n, (ast.With, ast.AsyncWith)):
+                    for item in n.items:
+                        if item.optional_vars is not None:
+                            self._record_target(item.optional_vars, None)
+                elif isinstance(n, ast.Return):
+                    self.returns.append(n)
+
+    def _record_target(self, tgt: ast.AST, value: Optional[ast.AST]) -> None:
+        if isinstance(tgt, ast.Name):
+            self.assigns.setdefault(tgt.id, []).append((value, None))
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            for i, elt in enumerate(tgt.elts):
+                if isinstance(elt, ast.Name):
+                    self.assigns.setdefault(elt.id, []).append((value, i))
+                elif isinstance(elt, (ast.Tuple, ast.List, ast.Starred)):
+                    for sub in ast.walk(elt):
+                        if isinstance(sub, ast.Name):
+                            self.assigns.setdefault(sub.id, []).append(
+                                (OPAQUE, None))
+        # Subscript / Attribute stores bind no local name
+
+    def binds(self, name: str) -> bool:
+        """Is ``name`` a local of this function (param/assign/def)?"""
+        return (name in self.params or name in self.assigns
+                or name in self.nested
+                or name == self.vararg or name == self.kwarg)
+
+    def own_nodes(self) -> Iterator[ast.AST]:
+        for stmt in self.node.body:
+            yield from own_walk(stmt)
+
+    def __repr__(self) -> str:
+        return f"<FuncInfo {self.module.path}:{self.qualname}>"
+
+
+class ModuleInfo:
+    """One parsed file: defs, imports and module-level assignments."""
+
+    __slots__ = ("path", "name", "is_package", "tree", "funcs", "top",
+                 "imports", "assigns")
+
+    def __init__(self, path: str, tree: ast.Module):
+        self.path = path
+        self.name = module_name_for(path)
+        self.is_package = path.endswith("__init__.py")
+        self.tree = tree
+        self.funcs: List[FuncInfo] = []
+        self.top: Dict[str, FuncInfo] = {}
+        # local alias -> (module dotted name, attr or None)
+        self.imports: Dict[str, Tuple[str, Optional[str]]] = {}
+        self.assigns: Dict[str, List[Tuple[Optional[ast.AST],
+                                           Optional[int]]]] = {}
+        self._index()
+
+    # -- construction -------------------------------------------------------
+
+    def _index(self) -> None:
+        self._collect_imports()
+        self._collect_module_assigns()
+        self._collect_funcs(self.tree, prefix="", parent=None, top=True)
+
+    def _collect_imports(self) -> None:
+        # function-level imports are merged into one flat map: resolution
+        # only needs "what does this alias ultimately name", and local
+        # shadowing of an import alias is vanishingly rare in this tree
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    local = alias.asname or alias.name.split(".")[0]
+                    target = alias.name if alias.asname else \
+                        alias.name.split(".")[0]
+                    self.imports[local] = (target, None)
+            elif isinstance(node, ast.ImportFrom):
+                mod = self._resolve_from(node)
+                if mod is None:
+                    continue
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    self.imports[alias.asname or alias.name] = \
+                        (mod, alias.name)
+
+    def _resolve_from(self, node: ast.ImportFrom) -> Optional[str]:
+        if node.level == 0:
+            return node.module
+        base_parts = self.name.split(".") if self.name else []
+        # in a package __init__, level 1 is the package itself (its name
+        # already lost the `__init__` segment), so strip one less
+        drop = node.level - 1 if self.is_package else node.level
+        if drop > len(base_parts):
+            return None
+        base = ".".join(base_parts[:len(base_parts) - drop])
+        if node.module:
+            return f"{base}.{node.module}" if base else node.module
+        return base or None
+
+    def _collect_module_assigns(self) -> None:
+        # top-level simple constants (REQUIRED_STATS, scope tuples, ...);
+        # walk stops at function defs, descends through top-level if/try
+        for stmt in self.tree.body:
+            for n in own_walk(stmt):
+                if isinstance(n, ast.ClassDef):
+                    break
+                if isinstance(n, ast.Assign):
+                    for tgt in n.targets:
+                        if isinstance(tgt, ast.Name):
+                            self.assigns.setdefault(tgt.id, []).append(
+                                (n.value, None))
+                elif isinstance(n, ast.AnnAssign) and n.value is not None \
+                        and isinstance(n.target, ast.Name):
+                    self.assigns.setdefault(n.target.id, []).append(
+                        (n.value, None))
+
+    def _collect_funcs(self, node: ast.AST, prefix: str,
+                       parent: Optional[FuncInfo], top: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, _FUNC_NODES):
+                qual = f"{prefix}{child.name}"
+                fi = FuncInfo(self, child, qual, parent)
+                self.funcs.append(fi)
+                if parent is not None:
+                    parent.nested[child.name] = fi
+                elif top:
+                    self.top[child.name] = fi
+                self._collect_funcs(child, prefix=f"{qual}.", parent=fi,
+                                    top=False)
+            elif isinstance(child, ast.ClassDef):
+                # methods are indexed (qualname Class.meth) but are not
+                # call-resolution targets — instance dispatch is dynamic
+                self._collect_funcs(child, prefix=f"{prefix}{child.name}.",
+                                    parent=None, top=False)
+            else:
+                self._collect_funcs(child, prefix=prefix, parent=parent,
+                                    top=top and parent is None)
+
+    # -- queries ------------------------------------------------------------
+
+    def enclosing_func(self, node: ast.AST) -> Optional[FuncInfo]:
+        """The innermost FuncInfo whose own body contains ``node``."""
+        for fi in self.funcs:
+            for n in fi.own_nodes():
+                if n is node:
+                    return fi
+        return None
+
+
+class Program:
+    """The loaded module set plus name/function resolution."""
+
+    def __init__(self, modules: Sequence[ModuleInfo]):
+        self.modules: List[ModuleInfo] = list(modules)
+        self.by_path: Dict[str, ModuleInfo] = {m.path: m for m in modules}
+        self.by_name: Dict[str, ModuleInfo] = {}
+        for m in modules:
+            if m.name:
+                self.by_name[m.name] = m
+        self._analysis = None
+
+    # -- name resolution ----------------------------------------------------
+
+    def qualified_name(self, mod: ModuleInfo,
+                       expr: ast.AST) -> Optional[str]:
+        """Dotted origin of a Name/Attribute load, or None."""
+        chain: List[str] = []
+        node = expr
+        while isinstance(node, ast.Attribute):
+            chain.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        chain.append(node.id)
+        chain.reverse()
+        base = chain[0]
+        if base in mod.imports:
+            target, attr = mod.imports[base]
+            parts = [target] + ([attr] if attr else []) + chain[1:]
+            return ".".join(parts)
+        if base in mod.top and len(chain) == 1:
+            return f"{mod.name}.{base}" if mod.name else base
+        return None
+
+    def _lookup_top(self, module_name: str, attr: str,
+                    hops: int = 5) -> Optional[FuncInfo]:
+        """Find ``attr`` as a top-level def of ``module_name``,
+        following package re-export chains (``from .step import f`` in
+        an ``__init__.py``) up to ``hops`` links."""
+        for _ in range(hops):
+            other = self.by_name.get(module_name)
+            if other is None:
+                return None
+            if attr in other.top:
+                return other.top[attr]
+            nxt = other.imports.get(attr)
+            if nxt is None:
+                return None
+            target, sub = nxt
+            if sub is None:
+                return None
+            module_name, attr = target, sub
+        return None
+
+    def resolve_func(self, mod: ModuleInfo, expr: ast.AST,
+                     scope: Optional[FuncInfo] = None
+                     ) -> Optional[FuncInfo]:
+        """The FuncInfo a call target statically denotes, if any."""
+        if isinstance(expr, ast.Name):
+            fi = scope
+            while fi is not None:
+                if expr.id in fi.nested:
+                    return fi.nested[expr.id]
+                if fi.binds(expr.id):
+                    return None     # rebound locally; not a static def
+                fi = fi.parent
+            if expr.id in mod.top:
+                return mod.top[expr.id]
+            if expr.id in mod.imports:
+                target, attr = mod.imports[expr.id]
+                if attr is None:
+                    return None
+                return self._lookup_top(target, attr)
+            return None
+        if isinstance(expr, ast.Attribute):
+            qn = self.qualified_name(mod, expr)
+            if qn is None:
+                return None
+            head, _, leaf = qn.rpartition(".")
+            if head:
+                return self._lookup_top(head, leaf)
+            return None
+        return None
+
+    def analysis(self):
+        """The shared, lazily-built FlowAnalysis (see rules_flow)."""
+        if self._analysis is None:
+            from .rules_flow import FlowAnalysis
+            self._analysis = FlowAnalysis(self)
+        return self._analysis
+
+
+def build_program(file_sources: Sequence[Tuple[str, str]]) -> Program:
+    """Parse (relpath, source) pairs into a Program; unparsable files
+    are skipped (the driver reports them as RS999)."""
+    modules = []
+    for relpath, source in file_sources:
+        try:
+            tree = ast.parse(source, filename=relpath)
+        except SyntaxError:
+            continue
+        modules.append(ModuleInfo(relpath, tree))
+    return Program(modules)

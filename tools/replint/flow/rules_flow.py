@@ -1,0 +1,505 @@
+"""The flow-aware rules (RS010–RS015), on top of one shared analysis.
+
+All six rules consume a single :class:`FlowAnalysis` computed lazily
+per :class:`~.loader.Program` and cached on it — the driver lints many
+files against one program, so traced-body discovery, the call graph
+and the taint summaries run once per invocation, not once per file.
+Each rule's ``check(ctx)`` just selects the precomputed findings for
+``ctx.path``, which keeps them first-class citizens of the existing
+Finding / suppression / JSON machinery (a flow finding is suppressed by
+the same ``# replint: off=RSxxx <reason>`` comment on its line).
+
+Decision policy shared by every rule: **flag only what resolves
+fully**. An UNKNOWN anywhere in a value chain, an unresolvable callee,
+a mesh with no visible constructor — all make the rule silent for that
+site. The cost is missed bugs behind dynamic constructs; the benefit is
+that a finding is always actionable and the tree lints to zero without
+blanket suppressions.
+"""
+
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .. import config
+from ..core import FileContext, Finding, Rule, rule
+from ..rules import _terminal_name
+from .callgraph import traced_closure
+from .contexts import (ContextVisitor, Frame, TracedSite, _call_arg,
+                       strings_of)
+from .loader import UNKNOWN, FuncInfo, ModuleInfo, Program, build_program
+from .taint import TaintAnalysis
+
+Entry = Tuple[str, int, int, str]       # (path, line, col, message)
+
+
+def _matches(path: str, globs) -> bool:
+    return any(fnmatch.fnmatch(path, g) for g in globs)
+
+
+def _body_functions(body: FuncInfo) -> List[FuncInfo]:
+    """The body plus everything lexically nested in it."""
+    out = [body]
+    stack = list(body.nested.values())
+    while stack:
+        fi = stack.pop()
+        out.append(fi)
+        stack.extend(fi.nested.values())
+    return out
+
+
+class FlowAnalysis:
+    """One whole-program pass; findings bucketed per rule id."""
+
+    def __init__(self, program: Program):
+        self.program = program
+        self.visitor = ContextVisitor(program)
+        self.resolver = self.visitor.resolver
+        self.findings: Dict[str, List[Entry]] = {}
+        self._seen: Set[Tuple[str, str, int, int, str]] = set()
+        self._rs010()
+        self._rs011()
+        self._rs012()
+        self._rs013()
+        self._rs014()
+        self._rs015()
+
+    def _add(self, rule_id: str, mod: ModuleInfo, node: ast.AST,
+             message: str) -> None:
+        entry = (mod.path, getattr(node, "lineno", 1),
+                 getattr(node, "col_offset", 0), message)
+        key = (rule_id,) + entry
+        if key in self._seen:
+            return
+        self._seen.add(key)
+        self.findings.setdefault(rule_id, []).append(entry)
+
+    def entries(self, rule_id: str, path: str) -> Iterable[Entry]:
+        for e in self.findings.get(rule_id, ()):
+            if e[0] == path:
+                yield e
+
+    # -- RS010: collective axis names vs the enclosing mesh -----------------
+
+    def _rs010(self) -> None:
+        for site in self.visitor.sites:
+            if site.kind != "shard_map" or site.mesh_axes is None:
+                continue
+            for fi in _body_functions(site.body):
+                for n in fi.own_nodes():
+                    if isinstance(n, ast.Call):
+                        self._check_collective(site, fi, n)
+
+    def _check_collective(self, site: TracedSite, fi: FuncInfo,
+                          call: ast.Call) -> None:
+        name = _terminal_name(call.func)
+        pos = config.COLLECTIVE_AXIS_ARG.get(name)
+        if pos is None:
+            return
+        axis_expr = _call_arg(call, pos, "axis_name") \
+            or _call_arg(call, pos, "axis")
+        if axis_expr is None:
+            return
+        strs, complete = strings_of(
+            self.resolver.resolve(axis_expr, site.frames))
+        if not complete or not strs:
+            return
+        missing = sorted(strs - site.mesh_axes)
+        if missing:
+            declared = ", ".join(sorted(site.mesh_axes))
+            self._add("RS010", fi.module, call,
+                      f"`{name}` over axis {missing} not declared by the "
+                      f"enclosing mesh (declared axes: {declared}; "
+                      f"{site.where}) — a wrong axis name either crashes "
+                      f"at trace time or silently reduces over the wrong "
+                      f"devices")
+
+    # -- RS011: ppermute permutation soundness ------------------------------
+
+    def _rs011(self) -> None:
+        for mod in self.program.modules:
+            for fi in mod.funcs:
+                for n in fi.own_nodes():
+                    if isinstance(n, ast.Call) and \
+                            _terminal_name(n.func) == "ppermute":
+                        self._check_perm(mod, fi, n)
+
+    def _check_perm(self, mod: ModuleInfo, fi: Optional[FuncInfo],
+                    call: ast.Call) -> None:
+        perm = _call_arg(call, 2, "perm")
+        if perm is None:
+            return
+        if isinstance(perm, ast.Name) and fi is not None:
+            entries = fi.assigns.get(perm.id, ())
+            exprs = [e for e, i in entries if i is None and e is not None]
+            if len(exprs) != 1:
+                return
+            perm = exprs[0]
+        if isinstance(perm, (ast.List, ast.Tuple)):
+            self._check_literal_perm(mod, call, perm)
+        elif isinstance(perm, ast.ListComp):
+            self._check_ring_comp(mod, call, perm)
+        # anything else is not statically derivable — silent
+
+    def _check_literal_perm(self, mod: ModuleInfo, call: ast.Call,
+                            perm: ast.AST) -> None:
+        srcs: List[int] = []
+        dsts: List[int] = []
+        for elt in perm.elts:
+            if not (isinstance(elt, (ast.Tuple, ast.List))
+                    and len(elt.elts) == 2
+                    and all(isinstance(x, ast.Constant)
+                            and isinstance(x.value, int)
+                            and not isinstance(x.value, bool)
+                            for x in elt.elts)):
+                return      # not fully literal — silent
+            srcs.append(elt.elts[0].value)
+            dsts.append(elt.elts[1].value)
+        problems = []
+        if len(set(srcs)) != len(srcs):
+            problems.append("duplicate sources")
+        if len(set(dsts)) != len(dsts):
+            problems.append("duplicate destinations")
+        if not problems and set(srcs) != set(dsts):
+            problems.append("source and destination sets differ")
+        if problems:
+            self._add("RS011", mod, call,
+                      f"`ppermute` permutation is not a bijection "
+                      f"({'; '.join(problems)}) — devices receiving "
+                      f"multiple payloads (or none) corrupt the ring "
+                      f"exchange; use a rotation "
+                      f"`[(j, (j - s) % P) for j in range(P)]`")
+
+    def _check_ring_comp(self, mod: ModuleInfo, call: ast.Call,
+                         comp: ast.ListComp) -> None:
+        """Recognize the ring rotation; flag a mismatched modulus."""
+        if len(comp.generators) != 1:
+            return
+        gen = comp.generators[0]
+        if gen.ifs or not isinstance(gen.target, ast.Name):
+            return
+        it = gen.iter
+        if not (isinstance(it, ast.Call)
+                and _terminal_name(it.func) == "range"
+                and len(it.args) == 1):
+            return
+        size = it.args[0]
+        var = gen.target.id
+        elt = comp.elt
+        if not (isinstance(elt, (ast.Tuple, ast.List))
+                and len(elt.elts) == 2):
+            return
+        a, b = elt.elts
+        plain = a if isinstance(a, ast.Name) and a.id == var else \
+            b if isinstance(b, ast.Name) and b.id == var else None
+        rotated = b if plain is a else a if plain is b else None
+        if plain is None or not isinstance(rotated, ast.BinOp) or \
+                not isinstance(rotated.op, ast.Mod):
+            return
+        shift = rotated.left
+        uses_var = any(isinstance(x, ast.Name) and x.id == var
+                       for x in ast.walk(shift))
+        if not (isinstance(shift, ast.BinOp)
+                and isinstance(shift.op, (ast.Add, ast.Sub)) and uses_var):
+            return
+        if ast.dump(rotated.right) != ast.dump(size):
+            self._add("RS011", mod, call,
+                      f"`ppermute` rotation takes indices mod "
+                      f"`{ast.unparse(rotated.right)}` but ranges over "
+                      f"`range({ast.unparse(size)})` — a modulus that "
+                      f"differs from the ring size is not a bijection "
+                      f"over the mesh axis")
+
+    # -- RS012: host-device sync inside traced code -------------------------
+
+    def _traced_roots(self) -> List[Tuple[FuncInfo, str]]:
+        return [(s.body, f"traced via {s.where}")
+                for s in self.visitor.sites]
+
+    def _rs012(self) -> None:
+        closure = traced_closure(self.program, self._traced_roots())
+        for fi, why in closure.items():
+            mod = fi.module
+            for n in fi.own_nodes():
+                if not isinstance(n, ast.Call):
+                    continue
+                qn = self.program.qualified_name(mod, n.func)
+                if qn and qn.startswith("numpy."):
+                    leaf = qn.split(".")[-1]
+                    if leaf not in config.RS012_TRACE_SAFE_NUMPY:
+                        self._add("RS012", mod, n,
+                                  f"host numpy call `{ast.unparse(n.func)}`"
+                                  f" inside traced code ({why}) — forces a "
+                                  f"device sync / constant-folds a traced "
+                                  f"value; use `jnp` or hoist to the host "
+                                  f"side before the trace")
+                elif isinstance(n.func, ast.Attribute) and \
+                        n.func.attr in config.RS012_SYNC_METHODS:
+                    self._add("RS012", mod, n,
+                              f"`.{n.func.attr}()` inside traced code "
+                              f"({why}) — blocks on device execution "
+                              f"mid-trace; keep host syncs outside the "
+                              f"shard_map/jit body")
+                elif isinstance(n.func, ast.Name) and \
+                        n.func.id == "float" and n.args and \
+                        not isinstance(n.args[0], ast.Constant):
+                    self._add("RS012", mod, n,
+                              f"`float(...)` on a traced value inside "
+                              f"traced code ({why}) — concretizes the "
+                              f"tracer (host sync); use jnp casts")
+
+    # -- RS013: interprocedural semiring-identity taint ---------------------
+
+    def _rs013(self) -> None:
+        taint = TaintAnalysis(self.program)
+        for mod in self.program.modules:
+            if not _matches(mod.path, config.RS003_SCOPE):
+                continue
+            for fi in mod.funcs:
+                for node, msg in taint.function_findings(fi):
+                    self._add("RS013", mod, node, msg)
+
+    # -- RS014: retrace / executable-cache hazards --------------------------
+
+    _MUTABLE_DISPLAYS = (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.SetComp, ast.DictComp, ast.GeneratorExp)
+
+    def _rs014(self) -> None:
+        for mod in self.program.modules:
+            for fi in mod.funcs:
+                for n in fi.own_nodes():
+                    if isinstance(n, ast.Call):
+                        self._check_cache_hazard(mod, fi, n)
+            for stmt in mod.tree.body:
+                from .loader import own_walk
+                for n in own_walk(stmt):
+                    if isinstance(n, ast.Call):
+                        self._check_cache_hazard(mod, None, n)
+
+    def _check_cache_hazard(self, mod: ModuleInfo, fi: Optional[FuncInfo],
+                            call: ast.Call) -> None:
+        # (a) immediately-invoked jit: jax.jit(f)(args) retraces per call
+        if isinstance(call.func, ast.Call) and \
+                self.visitor._is_jit_ref(mod, call.func.func):
+            self._add("RS014", mod, call,
+                      "immediately-invoked `jit(...)(...)` — the "
+                      "compiled executable is discarded after one call "
+                      "and every call retraces; bind the jitted callable "
+                      "once (or go through `core.session`)")
+            return
+        # (b) closures passed to compile targets capturing mutable displays
+        name = _terminal_name(call.func)
+        if name not in config.RS014_COMPILE_TARGETS:
+            return
+        if name == "jit" and not self.visitor._is_jit_ref(mod, call.func):
+            return
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            closure = self._local_closure(mod, fi, arg)
+            if closure is not None:
+                self._check_captures(mod, fi, call, closure, name)
+
+    def _local_closure(self, mod: ModuleInfo, fi: Optional[FuncInfo],
+                       expr: ast.AST) -> Optional[FuncInfo]:
+        if not isinstance(expr, ast.Name) or fi is None:
+            return None
+        cur: Optional[FuncInfo] = fi
+        while cur is not None:
+            if expr.id in cur.nested:
+                return cur.nested[expr.id]
+            if cur.binds(expr.id):
+                return None
+            cur = cur.parent
+        return None
+
+    def _free_names(self, body: FuncInfo) -> Set[str]:
+        loads: Set[str] = set()
+        bound: Set[str] = set(body.params)
+        if body.vararg:
+            bound.add(body.vararg)
+        if body.kwarg:
+            bound.add(body.kwarg)
+        for n in ast.walk(body.node):
+            if isinstance(n, ast.Name):
+                if isinstance(n.ctx, ast.Load):
+                    loads.add(n.id)
+                else:
+                    bound.add(n.id)
+            elif isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if n is not body.node:
+                    bound.add(n.name)
+                a = n.args
+                bound.update(x.arg for x in a.posonlyargs + a.args
+                             + a.kwonlyargs)
+                if a.vararg:
+                    bound.add(a.vararg.arg)
+                if a.kwarg:
+                    bound.add(a.kwarg.arg)
+            elif isinstance(n, ast.Lambda):
+                a = n.args
+                bound.update(x.arg for x in a.posonlyargs + a.args
+                             + a.kwonlyargs)
+        return loads - bound
+
+    def _check_captures(self, mod: ModuleInfo, fi: Optional[FuncInfo],
+                        call: ast.Call, closure: FuncInfo,
+                        target: str) -> None:
+        for free in sorted(self._free_names(closure)):
+            cur = fi
+            while cur is not None:
+                if cur.binds(free):
+                    for value_expr, _ in cur.assigns.get(free, ()):
+                        if isinstance(value_expr, self._MUTABLE_DISPLAYS):
+                            kind = type(value_expr).__name__
+                            self._add(
+                                "RS014", mod, call,
+                                f"closure `{closure.name}` passed to "
+                                f"`{target}` captures `{free}`, bound to "
+                                f"a {kind} — unhashable/mutable captures "
+                                f"are baked in as stale constants at "
+                                f"trace time and defeat structure-keyed "
+                                f"executable caching; capture a "
+                                f"tuple/scalar or pass it as a traced "
+                                f"argument")
+                    break
+                cur = cur.parent
+
+    # -- RS015: stats-surface completeness ----------------------------------
+
+    def _required_stats(self) -> Tuple[str, ...]:
+        for mod in self.program.modules:
+            if mod.name == config.DEVICE_COMMON_MODULE or \
+                    mod.name.endswith(".device_common") or \
+                    mod.name == "device_common":
+                for value_expr, _ in mod.assigns.get("REQUIRED_STATS", ()):
+                    if isinstance(value_expr, (ast.Tuple, ast.List)) and \
+                            all(isinstance(e, ast.Constant)
+                                and isinstance(e.value, str)
+                                for e in value_expr.elts):
+                        return tuple(e.value for e in value_expr.elts)
+        return config.REQUIRED_STATS_FALLBACK
+
+    def _rs015(self) -> None:
+        required = self._required_stats()
+        for mod in self.program.modules:
+            if not _matches(mod.path, config.RS015_SCOPE):
+                continue
+            for fi in mod.top.values():
+                if not fnmatch.fnmatch(fi.name, config.RS015_BUILDER_GLOB):
+                    continue
+                for ret in fi.returns:
+                    self._check_stats_return(mod, fi, ret, required)
+
+    def _check_stats_return(self, mod: ModuleInfo, fi: FuncInfo,
+                            ret: ast.Return,
+                            required: Tuple[str, ...]) -> None:
+        val = ret.value
+        if val is None:
+            return
+        if isinstance(val, ast.Name):
+            exprs = [e for e, i in fi.assigns.get(val.id, ())
+                     if i is None and e is not None]
+            if len(exprs) != 1:
+                return
+            val = exprs[0]
+        if not isinstance(val, ast.Call):
+            return
+        callee = _terminal_name(val.func)
+        if callee and fnmatch.fnmatch(callee, config.RS015_BUILDER_GLOB):
+            return      # delegation to another plan builder
+        stats_expr = None
+        for kw in val.keywords:
+            if kw.arg == "stats":
+                stats_expr = kw.value
+        if stats_expr is None:
+            return
+        keys = self._stats_keys(fi, stats_expr)
+        if keys is None:
+            return
+        missing = [k for k in required if k not in keys]
+        if missing:
+            self._add("RS015", mod, stats_expr,
+                      f"plan stats surface on a return path of "
+                      f"`{fi.name}` is missing REQUIRED_STATS key(s) "
+                      f"{missing} — every device engine reports the full "
+                      f"shared surface (device_common.REQUIRED_STATS) so "
+                      f"1D/2D/3D rows stay comparable")
+
+    def _stats_keys(self, fi: FuncInfo,
+                    expr: ast.AST) -> Optional[Set[str]]:
+        if isinstance(expr, ast.Name):
+            exprs = [e for e, i in fi.assigns.get(expr.id, ())
+                     if i is None and e is not None]
+            if len(exprs) != 1:
+                return None
+            expr = exprs[0]
+        if isinstance(expr, ast.Call) and \
+                _terminal_name(expr.func) == "dict":
+            if any(kw.arg is None for kw in expr.keywords):
+                return None     # **splat — cannot enumerate
+            return {kw.arg for kw in expr.keywords}
+        if isinstance(expr, ast.Dict):
+            if any(k is None or not (isinstance(k, ast.Constant)
+                                     and isinstance(k.value, str))
+                   for k in expr.keys):
+                return None
+            return {k.value for k in expr.keys}
+        return None
+
+
+# ---------------------------------------------------------------------------
+# rule classes — thin selectors over the shared analysis
+# ---------------------------------------------------------------------------
+
+class FlowRule(Rule):
+    """Base: pull this rule's entries for ctx.path from the program."""
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        program = ctx.program
+        if program is None:
+            # standalone lint_source call: single-file program
+            program = build_program([(ctx.path, ctx.source)])
+            ctx.program = program
+        for path, line, col, message in \
+                program.analysis().entries(self.RULE_ID, ctx.path):
+            yield Finding(self.RULE_ID, path, line, col, message)
+
+
+@rule
+class CollectiveAxisConsistency(FlowRule):
+    RULE_ID = "RS010"
+    TITLE = "collective axis name not declared by the enclosing mesh"
+
+
+@rule
+class PpermuteBijection(FlowRule):
+    RULE_ID = "RS011"
+    TITLE = "statically-derivable ppermute permutation is not a bijection"
+
+
+@rule
+class HostSyncInTrace(FlowRule):
+    RULE_ID = "RS012"
+    TITLE = "host-device sync (np.*/float()/.item()) inside traced code"
+
+
+@rule
+class SemiringIdentityTaint(FlowRule):
+    RULE_ID = "RS013"
+    TITLE = "literal zero laundered into a device fill (interprocedural)"
+    SCOPE = config.RS003_SCOPE
+
+
+@rule
+class RetraceCacheHazard(FlowRule):
+    RULE_ID = "RS014"
+    TITLE = "retrace/cache hazard: unhashable capture or one-shot jit"
+    ALLOW = config.RS014_ALLOW
+
+
+@rule
+class StatsSurfaceCompleteness(FlowRule):
+    RULE_ID = "RS015"
+    TITLE = "device plan stats surface missing REQUIRED_STATS keys"
+    SCOPE = config.RS015_SCOPE

@@ -1,0 +1,213 @@
+"""flow.taint — forward zero-literal taint, across call edges.
+
+RS003 catches a literal ``0``/``0.0`` spelled directly inside a fill
+call in a device-engine module. What it cannot see is *laundering*: the
+literal bound to a local first (``z = 0.0; np.full(shape, z)``) or
+passed through a helper whose parameter ends up in the fill position
+(``pad(shape, dtype, 0.0)`` where ``pad`` does the ``np.full``). This
+module tracks exactly that, forward only, over:
+
+  * simple assignments (``z = 0.0``, ``y = z``) within a function;
+  * call arguments into statically-resolvable callees, depth-limited
+    (:data:`~tools.replint.config.RS013_MAX_DEPTH`), with per-(func,
+    param) memoization.
+
+Sinks (see :func:`sink_reason`) are the semiring-identity positions:
+the fill argument of ``full``/``full_like``, any keyword named
+``fill``/``fill_value``/``constant_values``, and a subscript store.
+Calls that pin an integral/bool dtype are exempt — index metadata, not
+semiring values (same carve-out as RS003).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Set, Tuple
+
+from .. import config
+from ..rules import _is_zero_literal, _terminal_name
+from .loader import FuncInfo, Program
+
+
+def _dtype_is_integral(call: ast.Call, pos: Optional[int]) -> bool:
+    dtype = None
+    if pos is not None and len(call.args) > pos:
+        dtype = call.args[pos]
+    for kw in call.keywords:
+        if kw.arg == "dtype":
+            dtype = kw.value
+    name = _terminal_name(dtype) if dtype is not None else None
+    return name in config.INTEGRAL_DTYPE_NAMES
+
+
+def zero_locals(fi: FuncInfo) -> Set[str]:
+    """Local names whose every tracked assignment is a zero literal or
+    another zero local (iterated to a small fixpoint)."""
+    tainted: Set[str] = set()
+    for _ in range(4):
+        grew = False
+        for name, entries in fi.assigns.items():
+            if name in tainted:
+                continue
+            vals = [(e, i) for e, i in entries if i is None]
+            if not vals or len(vals) != len(entries):
+                continue
+            if all(e is not None
+                   and (_is_zero_literal(e)
+                        or (isinstance(e, ast.Name) and e.id in tainted))
+                   for e, _ in vals):
+                tainted.add(name)
+                grew = True
+        if not grew:
+            break
+    return tainted
+
+
+def _is_tainted(expr: ast.AST, tainted: Set[str]) -> bool:
+    return _is_zero_literal(expr) or (
+        isinstance(expr, ast.Name) and expr.id in tainted)
+
+
+def sink_reason(call: ast.Call, tainted: Set[str],
+                literal_counts: bool) -> Optional[Tuple[ast.AST, str]]:
+    """If this call feeds a zero into an identity position, say how.
+
+    ``literal_counts``: inside helpers (interprocedural summaries) a
+    bare literal in the sink position counts; at the top level of a
+    scoped file it does not — RS003 already reports those, and RS013
+    must not double-report.
+    """
+    def hits(expr: ast.AST) -> bool:
+        if isinstance(expr, ast.Name) and expr.id in tainted:
+            return True
+        return literal_counts and _is_zero_literal(expr)
+
+    name = _terminal_name(call.func)
+    if name in config.FULL_CALLEES:
+        fill = call.args[1] if len(call.args) > 1 else None
+        for kw in call.keywords:
+            if kw.arg == "fill_value":
+                fill = kw.value
+        if fill is not None and hits(fill) and \
+                not _dtype_is_integral(call, 2 if name == "full" else None):
+            return fill, f"the fill argument of `{name}`"
+    for kw in call.keywords:
+        if kw.arg in config.RS013_FILL_KWARGS and hits(kw.value) and \
+                not _dtype_is_integral(call, None):
+            return kw.value, f"keyword `{kw.arg}=`"
+    return None
+
+
+class TaintAnalysis:
+    """Per-program zero-taint with interprocedural param summaries."""
+
+    def __init__(self, program: Program):
+        self.program = program
+        # (FuncInfo, param) -> reason string | None
+        self._summaries: Dict[Tuple[FuncInfo, str], Optional[str]] = {}
+
+    # -- interprocedural summary -------------------------------------------
+
+    def param_reaches_identity(self, fi: FuncInfo, param: str,
+                               depth: int = config.RS013_MAX_DEPTH
+                               ) -> Optional[str]:
+        """How ``param`` reaches an identity sink inside ``fi`` (or via
+        deeper helpers), or None. Memoized; cycle-safe (in-progress
+        entries read as None)."""
+        key = (fi, param)
+        if key in self._summaries:
+            return self._summaries[key]
+        if depth <= 0:
+            return None
+        self._summaries[key] = None     # cycle guard
+        tainted = {param}
+        # propagate through simple local aliases of the param
+        for name, entries in fi.assigns.items():
+            if all(e is not None and i is None and isinstance(e, ast.Name)
+                   and e.id == param for e, i in entries):
+                tainted.add(name)
+        reason: Optional[str] = None
+        for n in fi.own_nodes():
+            if not isinstance(n, ast.Call):
+                continue
+            got = sink_reason(n, tainted, literal_counts=False)
+            if got is not None:
+                reason = f"{got[1]} in `{fi.name}` " \
+                         f"({fi.module.path}:{n.lineno})"
+                break
+            deeper = self._through_call(n, tainted, fi, depth)
+            if deeper is not None:
+                reason = deeper
+                break
+        self._summaries[key] = reason
+        return reason
+
+    def _through_call(self, call: ast.Call, tainted: Set[str],
+                      fi: FuncInfo, depth: int) -> Optional[str]:
+        callee = self.program.resolve_func(fi.module, call.func, scope=fi)
+        if callee is None or callee is fi:
+            return None
+        for pos, arg in enumerate(call.args):
+            if isinstance(arg, ast.Name) and arg.id in tainted and \
+                    pos < len(callee.params):
+                got = self.param_reaches_identity(
+                    callee, callee.params[pos], depth - 1)
+                if got is not None:
+                    return got
+        for kw in call.keywords:
+            if kw.arg in callee.params and \
+                    isinstance(kw.value, ast.Name) and \
+                    kw.value.id in tainted:
+                got = self.param_reaches_identity(callee, kw.arg, depth - 1)
+                if got is not None:
+                    return got
+        return None
+
+    # -- per-function findings ---------------------------------------------
+
+    def function_findings(self, fi: FuncInfo
+                          ) -> Iterator[Tuple[ast.AST, str]]:
+        """(node, message) pairs for zero-identity flows in ``fi``."""
+        tainted = zero_locals(fi)
+        for n in fi.own_nodes():
+            if isinstance(n, ast.Call):
+                got = sink_reason(n, tainted, literal_counts=False)
+                if got is not None:
+                    node, how = got
+                    yield node, (
+                        f"literal zero reaches {how} through a local "
+                        f"binding — use `semiring.zero` / "
+                        f"`semiring.fill(...)`; a literal zero is the "
+                        f"wrong identity under min-plus")
+                    continue
+                yield from self._call_findings(n, tainted, fi)
+            elif isinstance(n, ast.Assign):
+                for tgt in n.targets:
+                    if isinstance(tgt, ast.Subscript) and \
+                            isinstance(n.value, ast.Name) and \
+                            n.value.id in tainted:
+                        yield n.value, (
+                            f"storing zero-valued local "
+                            f"`{n.value.id}` into an array — use "
+                            f"`semiring.zero` (wrong identity under "
+                            f"min-plus)")
+
+    def _call_findings(self, call: ast.Call, tainted: Set[str],
+                       fi: FuncInfo) -> Iterator[Tuple[ast.AST, str]]:
+        callee = self.program.resolve_func(fi.module, call.func, scope=fi)
+        if callee is None or callee is fi:
+            return
+        args = [(arg, callee.params[pos] if pos < len(callee.params)
+                 else None) for pos, arg in enumerate(call.args)]
+        args += [(kw.value, kw.arg) for kw in call.keywords
+                 if kw.arg in callee.params]
+        for arg, param in args:
+            if param is None or not _is_tainted(arg, tainted):
+                continue
+            how = self.param_reaches_identity(callee, param)
+            if how is not None:
+                yield arg, (
+                    f"literal zero passed as `{param}=` reaches a "
+                    f"semiring-identity position: {how} — pass "
+                    f"`semiring.zero` instead (helper-laundered "
+                    f"identity; wrong under min-plus)")

@@ -1,4 +1,11 @@
-"""Finding reporters — text for humans/CI logs, JSON for tooling."""
+"""Finding reporters — text for humans/CI logs, JSON for tooling.
+
+The text format is one finding per line, ``path:line:col: RSxxx msg``
+with a 1-indexed column (editors and CI annotators agree on 1-indexed;
+``Finding.col`` itself keeps the ast 0-indexed convention). The JSON
+format carries ``schema_version`` so downstream consumers (and the
+``--baseline`` escape hatch) can detect shape changes.
+"""
 
 from __future__ import annotations
 
@@ -7,23 +14,42 @@ from typing import List, Sequence
 
 from .core import Finding, Rule
 
+# bump when the JSON shape changes incompatibly:
+#   1 — initial shape (findings/files_checked/suppressed/ok)
+#   2 — added schema_version itself and the baselined count
+JSON_SCHEMA_VERSION = 2
+
+
+def format_finding(f: Finding) -> str:
+    """Canonical single-line rendering: ``path:line:col: RSxxx message``
+    (column 1-indexed)."""
+    return f"{f.path}:{f.line}:{f.col + 1}: {f.rule} {f.message}"
+
 
 def render_text(findings: Sequence[Finding], n_files: int,
-                n_suppressed: int) -> str:
-    lines: List[str] = [f.render() for f in findings]
+                n_suppressed: int, n_baselined: int = 0) -> str:
+    lines: List[str] = [format_finding(f) for f in findings]
     summary = (f"replint: {len(findings)} finding"
-               f"{'' if len(findings) == 1 else 's'} in {n_files} files"
-               + (f" ({n_suppressed} suppressed)" if n_suppressed else ""))
+               f"{'' if len(findings) == 1 else 's'} in {n_files} files")
+    extras = []
+    if n_suppressed:
+        extras.append(f"{n_suppressed} suppressed")
+    if n_baselined:
+        extras.append(f"{n_baselined} baselined")
+    if extras:
+        summary += f" ({', '.join(extras)})"
     lines.append(summary)
     return "\n".join(lines)
 
 
 def render_json(findings: Sequence[Finding], n_files: int,
-                n_suppressed: int) -> str:
+                n_suppressed: int, n_baselined: int = 0) -> str:
     return json.dumps({
+        "schema_version": JSON_SCHEMA_VERSION,
         "findings": [f.to_dict() for f in findings],
         "files_checked": n_files,
         "suppressed": n_suppressed,
+        "baselined": n_baselined,
         "ok": not findings,
     }, indent=2)
 

@@ -5,9 +5,34 @@
 #   tools/verify.sh -x -k moe  # extra pytest args pass through
 #
 # replint runs first: a standing-invariant violation (raw pallas_call,
-# literal semiring zero, session bypass, ...) fails tier-1 before pytest
-# spends a second — see tools/replint/README.md.
-set -euo pipefail
+# literal semiring zero, session bypass, wrong collective axis, ...)
+# fails tier-1 before pytest spends a second — see
+# tools/replint/README.md. Each phase is timed; the lint phase has a
+# hard 30s budget so the interprocedural flow analysis can never turn
+# the pre-commit loop into a coffee break.
+set -uo pipefail
 cd "$(dirname "$0")/.."
+
+LINT_BUDGET_S=30
+
+lint_start=$SECONDS
 tools/lint.sh
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -q "$@"
+lint_rc=$?
+lint_s=$((SECONDS - lint_start))
+if [[ $lint_rc -ne 0 ]]; then
+    echo "verify: lint FAILED after ${lint_s}s"
+    exit "$lint_rc"
+fi
+if [[ $lint_s -gt $LINT_BUDGET_S ]]; then
+    echo "verify: lint took ${lint_s}s — over the ${LINT_BUDGET_S}s budget" \
+         "(profile the flow pass in tools/replint/flow/ before landing)"
+    exit 1
+fi
+
+test_start=$SECONDS
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q "$@"
+test_rc=$?
+test_s=$((SECONDS - test_start))
+
+echo "verify: lint ${lint_s}s, tests ${test_s}s"
+exit "$test_rc"
