@@ -27,7 +27,7 @@ from repro.core.spgemm_1d_device import (build_device_plan, compile_ring,
                                          payload_need_maps)
 from repro.core.plan import Partition1D
 
-from .common import Csv, datasets, timer
+from .common import MODEL, Csv, datasets, timer
 
 
 def _reference_pair_payload(a_parts, col_tile_off, hit, nblocks, src, dst):
@@ -110,6 +110,35 @@ def _engine_bench(csv: Csv, data) -> None:
                 f"nprod={plan.stats['nprod_max']} bs=64, compiled")
 
 
+def _chunk_overlap(csv: Csv, data) -> None:
+    """Chunked vs unchunked ring plans: peak payload working set and the
+    modeled fetch-issue overlap of the double-buffered pipeline. Host
+    planning only — the stats are plan-level, so no devices are needed.
+    ``tools/bench_smoke.sh`` gates the chunked peak strictly below the
+    unchunked baseline and the overlap fraction above zero."""
+    a = data["hv15r-like"]
+    nparts, bs, chunk = 8, 64, 2
+    base = build_device_plan(a, a, nparts=nparts, bs=bs)
+    ck = build_device_plan(a, a, nparts=nparts, bs=bs, chunk=chunk)
+    csv.add("chunk/unchunked_peak_tiles", base.stats["peak_payload_tiles"],
+            f"P={nparts} bs={bs}: own stack + all ring payloads resident")
+    csv.add("chunk/peak_payload_tiles", ck.stats["peak_payload_tiles"],
+            f"chunk={chunk}: own stack + current + next chunk; "
+            "smoke: strictly < unchunked")
+    csv.add("chunk/chunks", ck.stats["chunks"])
+    csv.add("chunk/overlap_fraction", ck.stats["overlap_fraction"],
+            "fraction of fetched tiles issued behind compute; smoke: > 0")
+    # alpha-beta what-if: per-process fetch serial vs pipelined
+    nbytes = ck.stats["comm_bytes_padded"] / nparts
+    nmsgs = ck.stats["messages"] / nparts
+    compute_s = MODEL.time(nbytes, nmsgs)   # comm-bound break-even point
+    csv.add("chunk/serial_model_s", MODEL.time(nbytes, nmsgs) + compute_s)
+    csv.add("chunk/pipelined_model_s",
+            MODEL.pipelined_time(nbytes, nmsgs, compute_s,
+                                 ck.stats["overlap_fraction"]),
+            "CommModel.pipelined_time at the break-even compute load")
+
+
 def main(scale: int = 1) -> Csv:
     csv = Csv("device_ring")
     data = datasets(scale)
@@ -128,6 +157,7 @@ def main(scale: int = 1) -> Csv:
                         padded / max(exact, 1))
                 csv.add(f"{dname}/P={nparts}/bs={bs}/plan_s",
                         plan.stats["plan_seconds"])
+    _chunk_overlap(csv, data)
     _planner_microbench(csv, scale)
     _engine_bench(csv, data)
     return csv

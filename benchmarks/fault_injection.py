@@ -61,10 +61,13 @@ def main(scale: int = 1) -> Csv:
     csv.add("config/fault_rate", FAULT_RATE, "per stage, seeded")
 
     n = 96 * scale
+    # operands at the session's payload dtype — values-only repacks must be
+    # same-dtype or the session rejects them (typed ValidationError)
     a = intify(banded_clustered(n, max(n // 12, 8), 4.0, seed=31))
-    b = intify(erdos_renyi(n, n, 3.0, seed=32))
+    a = a.astype(np.float32)
+    b = intify(erdos_renyi(n, n, 3.0, seed=32)).astype(np.float32)
     # a values-jittered twin with a's structure: the repack workload
-    a_jit = a.astype(np.float64)
+    a_jit = a.astype(np.float32)
     a_jit.data[:] = a.data + 2.0
 
     bs = 16

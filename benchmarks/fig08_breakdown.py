@@ -1,16 +1,80 @@
 """Fig. 8 — per-process breakdown & load imbalance of the 1D algorithm on
-the structured showcase, across process counts (strong-scaling view)."""
+the structured showcase, across process counts (strong-scaling view).
+
+``--engine device`` adds the device-ring fetch/compute breakdown: the
+compiled ring (chunked and unchunked) is timed with ``block_until_ready``
+fences in host code — never inside the traced body — and the chunked
+plan's ``overlap_fraction`` feeds :meth:`CommModel.pipelined_time` to
+model what the double-buffered pipeline hides:
+
+  PYTHONPATH=src python -m benchmarks.fig08_breakdown --engine device
+"""
 
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
 from repro.core import spgemm_1d
 
-from .common import MODEL, Csv, datasets
+from .common import MODEL, Csv, datasets, timer
+
+# device-mode knobs: reference concurrency for the modeled fetch split
+# (host planning only) and the ring chunk size under test
+REF_P, DEV_BS, DEV_CHUNK = 8, 64, 2
 
 
-def main(scale: int = 1) -> Csv:
+def _device_breakdown(csv: Csv, a) -> None:
+    """Fetch-vs-compute split of the double-buffered device ring.
+
+    Compute is *measured*: the compiled ring executes at the feasible
+    device geometry and is timed around ``jax.block_until_ready`` — the
+    fences live in host timing code, outside anything traced. Fetch is
+    *modeled* (alpha-beta on the plan's padded bytes, like the rest of
+    this figure), and the chunked plan's ``overlap_fraction`` says how
+    much of it the pipeline can hide.
+    """
+    import jax
+
+    from repro.core.spgemm_1d_device import build_device_plan, compile_ring
+
+    from .device_compare import geometry
+
+    ndev, nparts, _, _ = geometry()
+
+    # measured walls at the feasible geometry, chunked vs unchunked
+    for tag, chunk in (("unchunked", None), ("chunked", DEV_CHUNK)):
+        plan = build_device_plan(a, a, nparts=nparts, bs=DEV_BS, chunk=chunk)
+        fn, args = compile_ring(plan)
+        jax.block_until_ready(fn(*args))          # warm the jit cache
+        t = timer(lambda: jax.block_until_ready(fn(*args)), repeats=3)
+        csv.add(f"device/ring_{tag}_wall_s", t,
+                f"P={nparts} bs={DEV_BS} compiled, fenced outside trace")
+        if tag == "unchunked":
+            t_ring = t
+
+    # modeled split at the reference concurrency (host planning only)
+    ck = build_device_plan(a, a, nparts=REF_P, bs=DEV_BS, chunk=DEV_CHUNK)
+    fetch_s = MODEL.time(ck.stats["comm_bytes_padded"] / REF_P,
+                         ck.stats["messages"] / REF_P)
+    compute_s = t_ring / REF_P
+    overlap = ck.stats["overlap_fraction"]
+    csv.add("device/fetch_model_s", fetch_s,
+            f"alpha-beta on padded bytes per process, P={REF_P}")
+    csv.add("device/compute_s", compute_s,
+            "measured ring wall scaled to the reference process count")
+    csv.add("device/overlap_fraction", overlap,
+            f"chunk={DEV_CHUNK}: fraction of fetch issued behind compute")
+    csv.add("device/serial_model_s", fetch_s + compute_s)
+    csv.add("device/pipelined_model_s",
+            MODEL.pipelined_time(ck.stats["comm_bytes_padded"] / REF_P,
+                                 ck.stats["messages"] / REF_P,
+                                 compute_s, overlap),
+            "double-buffered ring: overlapped fetch hides behind compute")
+
+
+def main(scale: int = 1, engine: str = "host") -> Csv:
     csv = Csv("fig08")
     a = datasets(scale)["hv15r-like"]
     for nparts in (8, 16, 32, 64):
@@ -23,8 +87,18 @@ def main(scale: int = 1) -> Csv:
                 float(flops_pp.max() / max(flops_pp.mean(), 1)),
                 "tamed at higher concurrency per paper")
         csv.add(f"P={nparts}/compute_ms_max", res.t_compute.max() * 1e3)
+    if engine == "device":
+        _device_breakdown(csv, a)
+    elif engine != "host":
+        raise ValueError(f"engine must be 'host' or 'device', got {engine!r}")
     return csv
 
 
 if __name__ == "__main__":
-    main().emit()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=1)
+    ap.add_argument("--engine", choices=("host", "device"), default="host",
+                    help="'device' adds the measured+modeled ring "
+                         "fetch/compute breakdown")
+    args = ap.parse_args()
+    main(scale=args.scale, engine=args.engine).emit()

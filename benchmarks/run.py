@@ -7,12 +7,20 @@
 planner wall-time and padded/exact ratios from ``device_ring``) to
 ``BENCH_paper_figs.json`` — the recorded bench trajectory that
 ``tools/bench_smoke.sh`` checks for perf regressions.
+
+The JSON write is a *merge*, keyed ``(bench, name)``: a ``--only`` run
+updates just its own rows and leaves every other bench's recorded
+trajectory in place (it used to truncate the file to the subset that ran,
+destroying the trajectory the smoke script gates on). Per-run failure
+counts append to ``failures_history`` so a clean partial run can't erase
+the record of an earlier failing one.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 import traceback
@@ -31,6 +39,39 @@ MODULES = [
 ]
 
 DEFAULT_JSON = "BENCH_paper_figs.json"
+
+
+def merge_trajectory(path: str, entries: list, scale: int, failures: int,
+                     only) -> dict:
+    """Merge this run's rows into the trajectory file at ``path``.
+
+    Rows are keyed ``(bench, name)``: new rows replace same-key old ones,
+    every other recorded row survives. ``failures`` for the current run is
+    kept at the top level (so exit-status consumers see it) and also
+    appended to ``failures_history`` with the run's scope.
+    """
+    data = dict(scale=scale, failures=0, rows=[])
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                data = json.load(fh)
+        except (json.JSONDecodeError, OSError):
+            pass                       # corrupt trajectory: start fresh
+    merged = {(r.get("bench"), r.get("name")): r
+              for r in data.get("rows", []) if isinstance(r, dict)}
+    for r in entries:
+        merged[(r.get("bench"), r.get("name"))] = r
+    data["rows"] = list(merged.values())
+    data["scale"] = scale if only is None else data.get("scale", scale)
+    data["failures"] = failures
+    history = data.get("failures_history")
+    if not isinstance(history, list):
+        history = []
+    history.append(dict(only=only, scale=scale, failures=failures))
+    data["failures_history"] = history
+    with open(path, "w") as fh:
+        json.dump(data, fh, indent=1)
+    return data
 
 
 def main(argv=None) -> int:
@@ -66,10 +107,10 @@ def main(argv=None) -> int:
             print(f"# {mod.__name__}: FAILED", file=sys.stderr)
 
     if args.json is not None:
-        with open(args.json, "w") as fh:
-            json.dump(dict(scale=args.scale, failures=failures,
-                           rows=entries), fh, indent=1)
-        print(f"# wrote {len(entries)} rows to {args.json}", file=sys.stderr)
+        data = merge_trajectory(args.json, entries, args.scale, failures,
+                                args.only)
+        print(f"# merged {len(entries)} rows into {args.json} "
+              f"({len(data['rows'])} total)", file=sys.stderr)
     return 1 if failures else 0
 
 

@@ -75,9 +75,12 @@ def main(scale: int = 1) -> Csv:
     csv.add("geometry/devices", ndev, geo)
 
     n = 512 * scale
+    # operands live at the session's payload dtype: the repack workload
+    # flips values only, and the session rejects dtype-mismatched repacks
     a = intify(banded_clustered(n, max(n // 40, 8), 6.0, seed=21))
+    a = a.astype(np.float32)
     # a values-jittered twin with the same structure (repack workload)
-    a_jit = a.astype(np.float64)
+    a_jit = a.astype(np.float32)
     a_jit.data[:] = a.data + 1.0
     a_jit.data[a_jit.data == 0] = 3.0
 

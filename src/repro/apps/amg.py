@@ -43,12 +43,18 @@ def _galerkin_device(a: CSC, r: CSC, nparts: int, bs: int,
 
     if session is None:
         session = SpGEMMSession()
-    rt = r.transpose()
-    rta = session.matmul(rt, a, nparts=nparts, bs=bs, nblocks=nblocks,
-                         engine=engine)
+    from ..core.session import as_payload_dtype
+
+    # AMG setup re-runs the Galerkin product with fresh values on a fixed
+    # hierarchy; cast operands to the session's payload dtype up front so
+    # those values-only repacks are same-dtype (the session rejects
+    # silent narrowing)
+    rt = as_payload_dtype(r.transpose())
+    rta = session.matmul(rt, as_payload_dtype(a), nparts=nparts, bs=bs,
+                         nblocks=nblocks, engine=engine)
     left = dict(session.last_call)
-    coarse = session.matmul(rta, r, nparts=nparts, bs=bs, nblocks=nblocks,
-                            engine=engine)
+    coarse = session.matmul(rta, as_payload_dtype(r), nparts=nparts, bs=bs,
+                            nblocks=nblocks, engine=engine)
     right = dict(session.last_call)
     return GalerkinResult(
         coarse=coarse,

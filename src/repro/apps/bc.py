@@ -205,7 +205,12 @@ def device_spgemm_fn(nparts: int = 1, bs: int = 16,
     session = session_or_new(session, interpret)
 
     def fn(x: CSC, y: CSC, semiring: Semiring):
-        c = session.matmul(x, y, nparts=nparts, bs=bs, nblocks=nblocks,
+        from ..core.session import as_payload_dtype
+
+        # the backward sweep repacks values into f32-keyed entries; the
+        # session rejects dtype-mismatched repacks, so cast explicitly
+        c = session.matmul(as_payload_dtype(x), as_payload_dtype(y),
+                           nparts=nparts, bs=bs, nblocks=nblocks,
                            semiring=semiring, engine=engine)
         # downstream σ/δ accumulation is float64; the exact small-int
         # frontier counts survive the f32 payloads unchanged

@@ -161,7 +161,12 @@ def mcl(a: CSC,
             ch = float(state["chaos"])
     converged = ch < tol
     while not converged and it < max_iter and m.nnz:
-        m2 = session.matmul(m, m, algorithm=algorithm, nparts=nparts,
+        # inflation/normalization run in float64 on the host; the session
+        # computes in float32 and rejects dtype-mismatched values repacks,
+        # so the expansion operand is cast explicitly at the boundary
+        from ..core.session import as_payload_dtype
+        mf = as_payload_dtype(m)
+        m2 = session.matmul(mf, mf, algorithm=algorithm, nparts=nparts,
                             grid=grid, layers=layers, bs=bs, engine=engine)
         comm += session.last_call["comm_bytes_planned"]
         it += 1

@@ -65,16 +65,22 @@ def sketch_apply(a: CSC, sketch: CSC, side: str = "left",
     The multiply routes through ``session`` (created if absent) on any
     engine; geometry kwargs forward to :meth:`SpGEMMSession.matmul`.
     """
+    from ..core.session import as_payload_dtype
+
     session = session_or_new(session, interpret)
+    # streams apply one sketch to many same-structure matrices — values-only
+    # repacks, which the session accepts only at its own payload dtype
     if side == "left":
         assert sketch.ncols == a.nrows, (sketch.shape, a.shape)
-        c = session.matmul(sketch, a, algorithm=algorithm, nparts=nparts,
+        c = session.matmul(as_payload_dtype(sketch), as_payload_dtype(a),
+                           algorithm=algorithm, nparts=nparts,
                            grid=grid, layers=layers, bs=bs, engine=engine)
     elif side == "right":
         assert sketch.ncols == a.ncols, (sketch.shape, a.shape)
-        c = session.matmul(a, sketch.transpose(), algorithm=algorithm,
-                           nparts=nparts, grid=grid, layers=layers, bs=bs,
-                           engine=engine)
+        c = session.matmul(as_payload_dtype(a),
+                           as_payload_dtype(sketch.transpose()),
+                           algorithm=algorithm, nparts=nparts, grid=grid,
+                           layers=layers, bs=bs, engine=engine)
     else:
         raise ValueError(f"side must be 'left' or 'right', got {side!r}")
     return SketchResult(sketched=c, sketch=sketch,

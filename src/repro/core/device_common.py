@@ -44,7 +44,7 @@ from .semiring import Semiring
 from .sparse import CSC, from_coo
 
 __all__ = [
-    "ENGINES", "REQUIRED_STATS", "SESSION_STATS",
+    "ENGINES", "REQUIRED_STATS", "CHUNK_STATS", "SESSION_STATS",
     "snap_to_tiles", "blockize_parts", "resolve_engine",
     "check_plan_semiring", "pack_schedules", "run_schedule",
     "device_grid_mesh", "decode_tiles",
@@ -52,16 +52,35 @@ __all__ = [
 
 ENGINES = ("pallas", "jnp")
 
+# the chunked-pipeline slice of the stats surface (PR 9 tentpole):
+#   peak_payload_tiles : per-device A-side working set in tiles — own
+#                        payload stack plus the fetched chunks resident at
+#                        once (double-buffered: current + next chunk); the
+#                        unchunked ring holds the whole gathered stack
+#   chunks             : schedule segments the compute phase streams
+#                        through (1 = legacy single-pass ring / SUMMA)
+#   overlap_fraction   : modeled fraction of fetched (padded) tiles whose
+#                        fetch is issued while a previous chunk's compute
+#                        is outstanding (0.0 for unchunked engines; the
+#                        measured counterpart is benchmarks/fig08
+#                        --engine device)
+CHUNK_STATS = ("peak_payload_tiles", "chunks", "overlap_fraction")
+
 # every device plan's ``stats`` dict must carry these keys with these
-# meanings (tests/test_device_engines.py pins the surface):
+# meanings (tests/test_device_engines.py pins the surface; replint RS015
+# requires this to stay a literal tuple — it is the authoritative list the
+# flow rules check plan builders against, so CHUNK_STATS above is spelled
+# out again rather than concatenated):
 #   comm_bytes_planned : payload bytes of real tiles the algorithm moves
 #   comm_bytes_padded  : bytes the static-shape collectives actually move
 #   messages           : planned point-to-point transfers (0 on a 1-device
 #                        mesh — nothing ever leaves the device)
 #   dense_flops        : MXU flops of the scheduled tile products
 #   plan_seconds       : host planner wall time
+#   peak_payload_tiles / chunks / overlap_fraction : CHUNK_STATS above
 REQUIRED_STATS = ("comm_bytes_planned", "comm_bytes_padded", "messages",
-                  "dense_flops", "plan_seconds")
+                  "dense_flops", "plan_seconds",
+                  "peak_payload_tiles", "chunks", "overlap_fraction")
 
 # the persistent-session stats surface (``core.session.SpGEMMSession.stats``
 # carries exactly these keys; tests/test_session.py pins the surface):
@@ -183,7 +202,7 @@ def pack_schedules(scheds: Sequence[dict]) -> dict:
 
 def run_schedule(stack_a, stack_b, a_slot, b_slot, c_slot, flags, *,
                  engine: str, nprod_max: int, nc_max: int, bs: int,
-                 interpret, semiring: Semiring):
+                 interpret, semiring: Semiring, seg_start: int = 0):
     """Compute phase shared by every engine body (traced under shard_map).
 
     Streams the padded per-device schedule over the payload stacks through
@@ -191,6 +210,13 @@ def run_schedule(stack_a, stack_b, a_slot, b_slot, c_slot, flags, *,
     path) or the segment-reduce reference (``engine="jnp"``). Returns the
     ``(nc_max + 1, bs, bs)`` output stack *including* the trailing garbage
     slot every pad product targets — callers drop it.
+
+    ``seg_start``/``nprod_max`` select one contiguous schedule segment
+    (static offset + length): the chunked 1D ring calls this once per
+    payload chunk over the same flat schedule arrays, and the per-segment
+    partials are combined by the caller under the semiring's additive
+    monoid. The default ``seg_start=0`` with the full length is the legacy
+    single-pass launch.
     """
     from ..kernels.bsr_spgemm.kernel import bsr_spgemm_pallas
     from ..kernels.bsr_spgemm.ref import bsr_spgemm_ref
@@ -199,10 +225,10 @@ def run_schedule(stack_a, stack_b, a_slot, b_slot, c_slot, flags, *,
         return bsr_spgemm_pallas(
             stack_a, stack_b, a_slot, b_slot, c_slot, flags,
             nprod=nprod_max, nc=nc_max + 1, bs=bs, interpret=interpret,
-            semiring=semiring)
+            semiring=semiring, seg_start=seg_start)
     return bsr_spgemm_ref(
         stack_a, stack_b, a_slot, b_slot, c_slot, nc=nc_max + 1,
-        semiring=semiring)
+        semiring=semiring, seg_start=seg_start, seg_len=nprod_max)
 
 
 def device_grid_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):

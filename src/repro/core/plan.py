@@ -352,3 +352,15 @@ class CommModel:
 
     def time(self, nbytes: float, nmessages: float) -> float:
         return nbytes / self.bandwidth + nmessages * self.latency
+
+    def pipelined_time(self, nbytes: float, nmessages: float,
+                       compute_seconds: float,
+                       overlap_fraction: float = 0.0) -> float:
+        """Modeled wall time of a double-buffered (fetch/compute pipelined)
+        exchange: the overlapped fraction of the communication hides behind
+        compute, bounded by whichever of the two phases is shorter.
+        ``overlap_fraction=0`` degenerates to serial ``time() + compute``.
+        """
+        t_comm = self.time(nbytes, nmessages)
+        hidden = overlap_fraction * min(t_comm, compute_seconds)
+        return t_comm + compute_seconds - hidden

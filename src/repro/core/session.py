@@ -67,8 +67,9 @@ from .sparse import CSC
 from .validate import (DeviceExecError, SpGEMMError, ValidationError,
                        validate_matmul_operands, wrap_stage_error)
 
-__all__ = ["SpGEMMSession", "session_or_new", "structure_fingerprint",
-           "values_fingerprint", "ALGORITHMS", "DOWNGRADE"]
+__all__ = ["SpGEMMSession", "session_or_new", "as_payload_dtype",
+           "structure_fingerprint", "values_fingerprint", "ALGORITHMS",
+           "DOWNGRADE"]
 
 ALGORITHMS = ("1d", "2d", "3d")
 
@@ -98,6 +99,23 @@ def values_fingerprint(mat: CSC) -> bytes:
     h = hashlib.blake2b(digest_size=16)
     h.update(mat.data.tobytes())
     return h.digest()
+
+
+def as_payload_dtype(mat: CSC, dtype=np.float32) -> CSC:
+    """Cast an operand's data to the session's payload dtype, explicitly.
+
+    Sessions compute in ``dtype`` (default float32) regardless of the
+    operand's host dtype; the cast used to happen silently inside
+    blockization. Values-only repacks now *reject* dtype-mismatched
+    operands (see :meth:`SpGEMMSession.matmul`), so iterated workloads
+    whose host arithmetic runs in float64 (BC's σ/δ sweeps, MCL's
+    inflation) cast at the call site — once, visibly — before handing
+    operands to the session. A no-op (no copy) when the dtype already
+    matches; structure is untouched either way, so cache keys are stable.
+    """
+    if np.dtype(mat.data.dtype) == np.dtype(dtype):
+        return mat
+    return mat.astype(dtype)
 
 
 def session_or_new(session: Optional["SpGEMMSession"],
@@ -247,7 +265,7 @@ class SpGEMMSession:
 
     def _plan(self, a: CSC, b: CSC, algorithm: str, nparts: int, grid: int,
               layers: int, bs: int, nblocks: Optional[int],
-              semiring: Semiring, dtype):
+              semiring: Semiring, dtype, chunk: Optional[int]):
         """Host planning only (the ``plan`` stage); returns
         (plan, decode, repack)."""
         from .spgemm_1d_device import (build_device_plan, decode_ring_output,
@@ -258,7 +276,8 @@ class SpGEMMSession:
         if algorithm == "1d":
             plan = build_device_plan(
                 a, b, nparts, bs=bs, nblocks=nblocks, dtype=dtype,
-                semiring=semiring, a_blockize_cache=self._blockize_cache)
+                semiring=semiring, a_blockize_cache=self._blockize_cache,
+                chunk=chunk)
             return plan, decode_ring_output, repack_ring_payloads
         plan = build_summa_plan(
             a, b, grid=grid, layers=layers if algorithm == "3d" else 1,
@@ -287,7 +306,8 @@ class SpGEMMSession:
                nblocks: Optional[int] = None,
                semiring: Semiring = PLUS_TIMES,
                engine: str = "auto",
-               dtype=np.float32) -> CSC:
+               dtype=np.float32,
+               chunk: Optional[int] = None) -> CSC:
         """C = A ⊗ B on the device path, cached by structure.
 
         ``algorithm`` selects the distributed engine: ``"1d"`` (the
@@ -295,10 +315,19 @@ class SpGEMMSession:
         geometry ``grid``×``grid``) or ``"3d"`` (Split-3D, geometry
         ``grid``×``grid``×``layers``). The geometry must fit the visible
         device count, exactly as for the direct ``run_device_*`` calls.
+
+        ``chunk`` selects the 1D ring's double-buffered k-chunk pipeline
+        (ring steps per fetched chunk; ``None`` = legacy single-pass
+        ring). It is part of the cache key — chunked and unchunked plans
+        compile different bodies — and is ignored by the 2d/3d engines,
+        exactly like ``nblocks``.
         """
         if algorithm not in ALGORITHMS:
             raise ValueError(
                 f"algorithm must be one of {ALGORITHMS}, got {algorithm!r}")
+        if chunk is not None and (not isinstance(chunk, int) or chunk < 1):
+            raise ValueError(
+                f"chunk must be a positive int or None, got {chunk!r}")
         engine = resolve_engine(engine)
         self.stats["calls"] += 1
         if self.validate:
@@ -323,7 +352,14 @@ class SpGEMMSession:
             try:
                 c, info = self._run_rung(a, b, alg_r, eng_r, algorithm,
                                          nparts, grid, layers, bs, nblocks,
-                                         semiring, dtype)
+                                         semiring, dtype, chunk)
+            except ValidationError:
+                # an ingress rejection (e.g. a dtype-mismatched values-only
+                # repack) is deterministic: every rung would refuse it the
+                # same way — and a colder rung would *accept* it by planning
+                # fresh with the silent cast the rejection exists to stop.
+                # The ladder is for device/stage failures, not bad requests.
+                raise
             except SpGEMMError as e:
                 last_err = e
                 if i + 1 < len(rungs):
@@ -345,7 +381,7 @@ class SpGEMMSession:
     def _run_rung(self, a: CSC, b: CSC, algorithm: str, engine: str,
                   requested: str, nparts: int, grid: int, layers: int,
                   bs: int, nblocks: Optional[int], semiring: Semiring,
-                  dtype) -> Tuple[CSC, dict]:
+                  dtype, chunk: Optional[int] = None) -> Tuple[CSC, dict]:
         """One rung of the ladder: serve the multiply with a fixed
         (algorithm, engine), all four stages under retry + typed wrapping.
 
@@ -357,11 +393,13 @@ class SpGEMMSession:
             geom = (nparts if requested == "1d" else grid * grid,)
         else:
             geom = (grid, layers if algorithm == "3d" else 1)
-        # nblocks is the 1D ring's Algorithm-2 fetch-grouping knob; the
-        # SUMMA planners have no such parameter, so it must not split
-        # byte-identical 2d/3d plans into distinct entries
+        # nblocks and chunk are 1D-ring knobs (Algorithm-2 fetch grouping /
+        # the double-buffered chunk size); the SUMMA planners have neither,
+        # so they must not split byte-identical 2d/3d plans into distinct
+        # entries
         key = (algorithm, geom, bs,
                nblocks if algorithm == "1d" else None,
+               chunk if algorithm == "1d" else None,
                semiring.name, engine, np.dtype(dtype).str,
                structure_fingerprint(a), structure_fingerprint(b))
         ctx = {"algorithm": algorithm, "engine": engine,
@@ -379,11 +417,33 @@ class SpGEMMSession:
         plan_seconds = 0.0
         try:
             if hit:
+                val_fp = (values_fingerprint(a), values_fingerprint(b))
+                if val_fp != entry.val_fp:
+                    # values-only repacks blockize straight into the plan's
+                    # payload stacks; a dtype-mismatched operand would be
+                    # cast silently (float64 values narrowed into a
+                    # float32-keyed entry) and still count as a cache hit —
+                    # reject at ingress instead, before anything mutates
+                    mism = [
+                        f"operand {nm} has data dtype "
+                        f"{np.dtype(m.data.dtype).name}"
+                        for nm, i, m in (("a", 0, a), ("b", 1, b))
+                        if val_fp[i] != entry.val_fp[i]
+                        and np.dtype(m.data.dtype) != np.dtype(dtype)]
+                    if mism:
+                        self.stats["validation_failures"] += 1
+                        raise ValidationError(
+                            "dtype-mismatched values-only repack: "
+                            + "; ".join(mism)
+                            + f" but the cached plan's payloads are "
+                            f"{np.dtype(dtype).name} — repacking would "
+                            "silently narrow the values; cast the operand "
+                            "or request a matching dtype=",
+                            stage="repack", context=ctx)
                 self._cache.move_to_end(key)
                 self.stats["plan_cache_hits"] += 1
                 self.stats["plan_seconds_saved"] += \
                     entry.plan.stats["plan_seconds"]
-                val_fp = (values_fingerprint(a), values_fingerprint(b))
                 if val_fp != entry.val_fp:
                     # values-only path: refill payload stacks, keep the
                     # plan, the schedules and the compiled executable — and
@@ -415,7 +475,7 @@ class SpGEMMSession:
                     "plan",
                     lambda: self._plan(a, b, algorithm, geom[0], grid,
                                        layers, bs, nblocks, semiring,
-                                       dtype),
+                                       dtype, chunk),
                     ctx)
                 fn, args = self._stage(
                     "compile",
@@ -430,6 +490,11 @@ class SpGEMMSession:
                 return entry.decode(entry.plan, out)
 
             c = self._stage("execute", do_execute, ctx)
+        except ValidationError:
+            # ingress rejection of a malformed request: the cached entry is
+            # healthy and untouched — quarantining it (or bumping its
+            # breaker) would punish the cache for the caller's operand
+            raise
         except SpGEMMError:
             self._record_failure(key)
             raise

@@ -55,7 +55,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,7 +63,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import cpu_device_mesh, shard_map
-from .blocksparse import BlockSparse, build_schedule
+from .blocksparse import BlockSparse, build_schedule, flags_from_c_slot
 from .device_common import (ENGINES, blockize_parts, check_plan_semiring,
                             decode_tiles, pack_schedules, resolve_engine,
                             run_schedule, snap_to_tiles)
@@ -73,7 +73,7 @@ from .sparse import CSC
 
 __all__ = ["DeviceSpGEMMPlan", "build_device_plan", "compile_ring",
            "run_device_spgemm", "decode_ring_output", "payload_need_maps",
-           "repack_ring_payloads", "ENGINES"]
+           "repack_ring_payloads", "segment_ring_schedule", "ENGINES"]
 
 
 # ---------------------------------------------------------------------------
@@ -113,6 +113,21 @@ class DeviceSpGEMMPlan:
     exact_bytes: int           # planned payload bytes (sum of real tiles moved)
     padded_bytes: int          # what the static-shape ring actually moves
     stats: dict
+    # ---- chunked double-buffered pipeline (chunk=None: legacy single-pass
+    # ring — fetch everything, one schedule launch). chunk=c splits the
+    # ring steps into groups of <= c consecutive steps; the shard_map body
+    # issues group g+1's ppermutes into the spare payload slot while group
+    # g's schedule segment streams through the kernel, and per-segment
+    # partials combine under the semiring's additive monoid. The schedule
+    # arrays above are then flat per-segment blocks addressed by the
+    # static (seg_prod_off, seg_prod_len) pairs, with a_slot local to each
+    # segment's payload stack (own tiles for segment 0, the group's
+    # concatenated receives otherwise).
+    chunk: Optional[int] = None
+    seg_steps: Tuple[Tuple[int, ...], ...] = ((),)   # ring steps per segment
+    seg_payload_sizes: Tuple[int, ...] = (0,)        # payload tiles per segment
+    seg_prod_off: Tuple[int, ...] = (0,)             # flat schedule offsets
+    seg_prod_len: Tuple[int, ...] = (0,)             # padded products per seg
 
 
 def payload_need_maps(a_parts: List[BlockSparse],
@@ -155,6 +170,80 @@ def payload_need_maps(a_parts: List[BlockSparse],
     return need_all
 
 
+def segment_ring_schedule(scheds: List[dict], step_sizes: Sequence[int],
+                          max_na: int, chunk: int, nc_max: int) -> dict:
+    """Split per-device combined-stack schedules into per-chunk segments.
+
+    ``scheds[d]`` carries the device's products over the combined
+    post-fetch stack (``a_slot`` in combined-stack coordinates, ``c_slot``
+    nondecreasing). The ring steps are grouped into runs of ``<= chunk``
+    consecutive steps; segment 0 is the resident own-tile stack, segment
+    ``1+g`` is receive group ``g``. Products are routed to the segment
+    whose payload region their ``a_slot`` falls in (one vectorized
+    ``searchsorted`` per device — the combined layout is contiguous per
+    group, so the rebase to segment-local payload indices is a subtraction)
+    and packed into per-segment ``(P, len_g)`` blocks concatenated flat,
+    with pads pointing at local payload slot 0 and the garbage output slot
+    ``nc_max``. Product order is preserved inside each segment, so each
+    segment's ``c_slot`` stays nondecreasing and its first/last-visit
+    flags are valid *within the segment*; cross-segment revisits are
+    combined by the pipeline body under the semiring's additive monoid.
+    """
+    Pn = len(scheds)
+    nsteps = len(step_sizes)
+    step_off = np.concatenate(
+        [[0], np.cumsum(np.asarray(step_sizes, dtype=np.int64))])
+    groups = [tuple(range(g, min(g + chunk, nsteps)))
+              for g in range(0, nsteps, chunk)]
+    # payload region starts in the combined stack, one per segment
+    seg_payload_off = np.asarray(
+        [0] + [max_na + int(step_off[g[0]]) for g in groups], dtype=np.int64)
+    seg_payload_sizes = tuple(
+        [max_na] + [int(step_off[g[-1] + 1] - step_off[g[0]])
+                    for g in groups])
+    G = len(seg_payload_off)
+
+    parts: List[List[Tuple[np.ndarray, np.ndarray, np.ndarray]]] = []
+    counts = np.zeros((Pn, G), dtype=np.int64)
+    for d, s in enumerate(scheds):
+        a_sl = np.asarray(s["a_slot"], dtype=np.int64)
+        sid = np.searchsorted(seg_payload_off, a_sl, side="right") - 1
+        row = []
+        for g in range(G):
+            m = sid == g
+            row.append((a_sl[m] - seg_payload_off[g],
+                        np.asarray(s["b_slot"])[m],
+                        np.asarray(s["c_slot"])[m]))
+            counts[d, g] = int(m.sum())
+        parts.append(row)
+
+    seg_len = tuple(int(x) for x in counts.max(axis=0))
+    seg_off = tuple(int(x) for x in
+                    np.concatenate([[0], np.cumsum(seg_len)[:-1]]))
+    total = max(int(sum(seg_len)), 1)
+    A = np.zeros((Pn, total), dtype=np.int32)
+    B = np.zeros((Pn, total), dtype=np.int32)
+    C = np.full((Pn, total), nc_max, dtype=np.int32)
+    for d in range(Pn):
+        for g in range(G):
+            al, bl, cl = parts[d][g]
+            o = seg_off[g]
+            A[d, o:o + len(al)] = al
+            B[d, o:o + len(bl)] = bl
+            C[d, o:o + len(cl)] = cl
+    # flags are per-segment: each (P, len_g) block gets its own
+    # first/last-visit runs (pads form a trailing garbage-slot run)
+    F = np.zeros((Pn, total), dtype=np.int32)
+    for g in range(G):
+        o, ln = seg_off[g], seg_len[g]
+        if ln:
+            F[:, o:o + ln] = flags_from_c_slot(C[:, o:o + ln])
+    return dict(a_slot=A, b_slot=B, c_slot=C, flags=F,
+                seg_steps=((),) + tuple(groups),
+                seg_payload_sizes=seg_payload_sizes,
+                seg_prod_off=seg_off, seg_prod_len=seg_len)
+
+
 def build_device_plan(a: CSC, b: CSC, nparts: int,
                       part_k: Optional[Partition1D] = None,
                       part_n: Optional[Partition1D] = None,
@@ -162,7 +251,8 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
                       nblocks: Optional[int] = None,
                       dtype=np.float32,
                       semiring: Semiring = PLUS_TIMES,
-                      a_blockize_cache: Optional[dict] = None
+                      a_blockize_cache: Optional[dict] = None,
+                      chunk: Optional[int] = None
                       ) -> DeviceSpGEMMPlan:
     """Symbolic phase at tile granularity + static-shape padding.
 
@@ -171,6 +261,14 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
     multiplicative annihilator too), so the engines stay mask-free under
     min-plus / bool exactly as under plus-times.
 
+    ``chunk`` enables the double-buffered k-chunk pipeline: the ring steps
+    are grouped into runs of ``<= chunk`` steps, the product schedule is
+    split into matching segments at build time, and the compiled body
+    overlaps each group's fetch with the previous segment's compute,
+    bounding the per-device fetched working set by two adjacent chunks
+    instead of the whole gathered stack. ``None`` keeps the legacy
+    single-pass ring. Both decode bitwise-identically for every semiring.
+
     ``a_blockize_cache``: callers that re-plan against the *same* A many
     times (BC multiplies one adjacency operand by a fresh frontier every
     level) pass a dict here to reuse A's blockization across calls. The
@@ -178,6 +276,11 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
     stale) and assumes it is not mutated between calls.
     """
     assert a.ncols == b.nrows
+    if chunk is not None:
+        chunk = int(chunk)
+        if chunk < 1:
+            raise ValueError(f"chunk must be a positive int or None, "
+                             f"got {chunk}")
     t_plan0 = time.perf_counter()
     Pn = nparts
     if part_k is None:
@@ -312,6 +415,41 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
     packed = pack_schedules(scheds)
     nprod_max, nc_max = packed["nprod_max"], packed["nc_max"]
 
+    # ---- schedule segmentation (chunked pipeline) --------------------------
+    if chunk is None:
+        # legacy single-pass ring: one segment spanning own + all receives
+        sched_flat = dict(a_slot=packed["a_slot"], b_slot=packed["b_slot"],
+                          c_slot=packed["c_slot"], flags=packed["flags"])
+        seg_steps: Tuple[Tuple[int, ...], ...] = (tuple(range(Pn - 1)),)
+        seg_payload_sizes = (max_na + S_total,)
+        seg_prod_off = (0,)
+        seg_prod_len = (int(nprod_max),)
+        peak_payload_tiles = max_na + S_total
+        overlap_fraction = 0.0
+    else:
+        seg = segment_ring_schedule(scheds, step_sizes, max_na, chunk,
+                                    nc_max)
+        sched_flat = dict(a_slot=seg["a_slot"], b_slot=seg["b_slot"],
+                          c_slot=seg["c_slot"], flags=seg["flags"])
+        seg_steps = seg["seg_steps"]
+        seg_payload_sizes = seg["seg_payload_sizes"]
+        seg_prod_off = seg["seg_prod_off"]
+        seg_prod_len = seg["seg_prod_len"]
+        # double-buffered working set: own stack + current + next chunk
+        rs = list(seg_payload_sizes[1:])
+        if not rs:
+            peak_payload_tiles = max_na
+        elif len(rs) == 1:
+            peak_payload_tiles = max_na + rs[0]
+        else:
+            peak_payload_tiles = max_na + max(
+                rs[i] + rs[i + 1] for i in range(len(rs) - 1))
+        # modeled fetch-issue overlap: a chunk's fetch is overlapped iff
+        # the preceding segment has compute to hide it behind
+        overlapped = sum(rs[i] for i in range(len(rs))
+                         if seg_prod_len[i] > 0)
+        overlap_fraction = overlapped / S_total if S_total else 0.0
+
     tile_bytes = bs * bs * np.dtype(dtype).itemsize
     padded_tiles = Pn * S_total
     nprod_total = int(sum(len(s["a_slot"]) for s in scheds))
@@ -319,8 +457,8 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
     return DeviceSpGEMMPlan(
         nparts=Pn, bs=bs,
         a_tiles=a_tiles, b_tiles=b_tiles, send_slots=send_slots,
-        a_slot=packed["a_slot"], b_slot=packed["b_slot"],
-        c_slot=packed["c_slot"], flags=packed["flags"],
+        a_slot=sched_flat["a_slot"], b_slot=sched_flat["b_slot"],
+        c_slot=sched_flat["c_slot"], flags=sched_flat["flags"],
         step_sizes=tuple(step_sizes), nc_max=nc_max,
         c_rows=packed["c_rows"], c_cols=packed["c_cols"],
         c_counts=packed["c_counts"],
@@ -328,6 +466,9 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
         semiring=semiring,
         exact_bytes=exact_tiles * tile_bytes,
         padded_bytes=padded_tiles * tile_bytes,
+        chunk=chunk, seg_steps=seg_steps,
+        seg_payload_sizes=seg_payload_sizes,
+        seg_prod_off=seg_prod_off, seg_prod_len=seg_prod_len,
         stats=dict(
             # shared device-engine stats surface (device_common.REQUIRED_STATS)
             comm_bytes_planned=exact_tiles * tile_bytes,
@@ -335,6 +476,9 @@ def build_device_plan(a: CSC, b: CSC, nparts: int,
             messages=int(planned_msgs),
             dense_flops=2 * nprod_total * bs ** 3,
             plan_seconds=plan_seconds,
+            peak_payload_tiles=int(peak_payload_tiles),
+            chunks=len(seg_steps),
+            overlap_fraction=float(overlap_fraction),
             # 1D-specific detail
             na_max=na_max, nb_max=nb_max, nprod_max=int(nprod_max),
             nprod_total=nprod_total,
@@ -397,6 +541,14 @@ def _make_step_fn(plan: DeviceSpGEMMPlan, axis: str, engine: str,
     nc_max = plan.nc_max
     nprod_max = int(plan.a_slot.shape[1])
     semiring = plan.semiring
+    chunk = plan.chunk
+    seg_steps = plan.seg_steps
+    seg_off = plan.seg_prod_off
+    seg_len = plan.seg_prod_len
+    # static offset of each ring step's slot run inside send_slots
+    step_offs = [0]
+    for mx in step_sizes:
+        step_offs.append(step_offs[-1] + mx)
 
     def body(a_tiles, b_tiles, send_slots, a_slot, b_slot, c_slot, flags):
         # the body only executes while being traced, so a host-side callback
@@ -411,32 +563,82 @@ def _make_step_fn(plan: DeviceSpGEMMPlan, axis: str, engine: str,
         a_slot, b_slot, c_slot = a_slot[0], b_slot[0], c_slot[0]
         flags = flags[0]
 
-        # ---- fetch phase: ring of collective permutes ----------------------
-        recv = [a_tiles]
-        off = 0
-        for s_idx, mx in enumerate(step_sizes):
+        def fetch_step(s_idx):
+            # one ring step: pack the requested payload tiles, one
+            # collective permute at shift -(s_idx+1). Pad payloads carry
+            # the additive identity, like every other pad.
             s = s_idx + 1
-            if mx == 0:
-                continue
-            slots = jax.lax.dynamic_slice_in_dim(send_slots, off, mx)
-            # pad payloads carry the additive identity, like every other pad
+            slots = jax.lax.dynamic_slice_in_dim(
+                send_slots, step_offs[s_idx], step_sizes[s_idx])
             payload = jnp.where(
                 (slots >= 0)[:, None, None],
                 a_tiles[jnp.clip(slots, 0, None)], semiring.zero)
-            got = jax.lax.ppermute(
+            return jax.lax.ppermute(
                 payload, axis,
                 perm=[(j, (j - s) % Pn) for j in range(Pn)])
-            recv.append(got)
-            off += mx
-        stack = jnp.concatenate(recv, axis=0) if len(recv) > 1 else recv[0]
 
-        # ---- compute phase: scheduled kernel over the combined stack -------
-        # both engines write pad products into the trailing garbage slot
-        # (nc_max), dropped here; neither needs a validity mask.
-        out = run_schedule(stack, b_tiles, a_slot, b_slot, c_slot, flags,
-                           engine=engine, nprod_max=nprod_max, nc_max=nc_max,
-                           bs=bs, interpret=interpret, semiring=semiring)
-        return out[:nc_max][None]  # drop garbage slot, restore P axis slot
+        if chunk is None:
+            # ---- legacy single-pass ring: fetch everything, then one
+            # schedule launch over the combined stack ------------------------
+            recv = [a_tiles]
+            for s_idx, mx in enumerate(step_sizes):
+                if mx == 0:
+                    continue
+                recv.append(fetch_step(s_idx))
+            stack = (jnp.concatenate(recv, axis=0)
+                     if len(recv) > 1 else recv[0])
+
+            # both engines write pad products into the trailing garbage slot
+            # (nc_max), dropped here; neither needs a validity mask.
+            out = run_schedule(stack, b_tiles, a_slot, b_slot, c_slot, flags,
+                               engine=engine, nprod_max=nprod_max,
+                               nc_max=nc_max, bs=bs, interpret=interpret,
+                               semiring=semiring)
+            return out[:nc_max][None]  # drop garbage slot, restore P axis
+
+        # ---- chunked double-buffered pipeline ------------------------------
+        # Chunk g+1's ppermutes depend only on the resident own stack and
+        # the send-slot table — never on a partial result — so issuing them
+        # before chunk g's schedule segment lets the compiler overlap the
+        # collective with the compute it hides behind (the XLA analogue of
+        # the paper's MPI_Get-while-computing), while only two chunk
+        # payloads are ever live (cur + nxt) instead of the whole stack.
+        def fetch_segment(g):
+            parts = [fetch_step(s_idx) for s_idx in seg_steps[g]
+                     if step_sizes[s_idx] > 0]
+            if not parts:
+                return None
+            return jnp.concatenate(parts, axis=0) if len(parts) > 1 \
+                else parts[0]
+
+        def compute_segment(g, payload):
+            # segment-offset launch over the flat schedule arrays; the
+            # partial's unvisited output slots are masked to the additive
+            # identity (the Pallas kernel leaves them unspecified, the jnp
+            # reference leaves the reduce op's own identity) before the
+            # cross-segment combine.
+            off, ln = seg_off[g], seg_len[g]
+            partial = run_schedule(payload, b_tiles, a_slot, b_slot, c_slot,
+                                   flags, engine=engine, nprod_max=ln,
+                                   nc_max=nc_max, bs=bs, interpret=interpret,
+                                   semiring=semiring, seg_start=off)
+            c_seg = c_slot[off:off + ln]
+            visited = jax.ops.segment_sum(
+                jnp.ones_like(c_seg), c_seg,
+                num_segments=nc_max + 1) > 0
+            return jnp.where(visited[:, None, None], partial,
+                             jnp.asarray(semiring.zero, partial.dtype))
+
+        G = len(seg_steps)
+        acc = jnp.full((nc_max + 1, bs, bs), semiring.zero,
+                       dtype=jnp.float32)
+        cur = a_tiles  # segment 0's payload is the resident own stack
+        for g in range(G):
+            nxt = fetch_segment(g + 1) if g + 1 < G else None
+            if seg_len[g] > 0 and cur is not None:
+                acc = semiring.jnp_add(acc, compute_segment(g, cur))
+            cur = nxt
+        return acc[:nc_max][None]
 
     return body
 

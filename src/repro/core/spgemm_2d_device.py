@@ -381,6 +381,13 @@ def build_summa_plan(a: CSC, b: CSC, grid: int,
             messages=int(messages),
             dense_flops=2 * nprod_total * bs ** 3,
             plan_seconds=plan_seconds,
+            # SUMMA gathers the whole process-row/column working set up
+            # front and runs one schedule pass: no chunking, no overlap,
+            # and the per-device payload peak is the full gathered stack
+            peak_payload_tiles=int((grid - 1) * (max_na + max_nb)
+                                   + max_na + max_nb),
+            chunks=1,
+            overlap_fraction=0.0,
             # SUMMA-specific detail
             na_max=na_max, nb_max=nb_max, nprod_max=int(nprod_max),
             nprod_total=int(nprod_total), nc_max=int(nc_max),

@@ -66,8 +66,9 @@ def _kernel(
     acc_ref,     # (bs, bs) f32 accumulator
     *,
     semiring: Semiring,
+    seg_start: int,
 ):
-    s = pl.program_id(0)
+    s = pl.program_id(0) + seg_start
     first = (flags[s] & 1) != 0
     last = (flags[s] & 2) != 0
 
@@ -87,19 +88,24 @@ def _kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("nprod", "nc", "bs", "interpret", "out_dtype",
-                     "semiring"))
+                     "semiring", "seg_start"))
 def bsr_spgemm_pallas(a_tiles, b_tiles, a_slot, b_slot, c_slot, flags,
                       *, nprod: int, nc: int, bs: int,
                       interpret: Optional[bool] = None, out_dtype=jnp.float32,
-                      semiring: Semiring = PLUS_TIMES):
+                      semiring: Semiring = PLUS_TIMES, seg_start: int = 0):
     """Run the product schedule; returns (nc, bs, bs) output payloads.
 
     a_tiles / b_tiles : (na, bs, bs), (nb, bs, bs) payload stacks whose
         absent positions hold ``semiring.zero``
-    a_slot/b_slot/c_slot/flags : (nprod,) i32 schedule. Contents are traced
-        data (scalar-prefetched); only lengths are static.
+    a_slot/b_slot/c_slot/flags : (nprod,)-or-longer i32 schedule. Contents
+        are traced data (scalar-prefetched); only lengths are static.
     semiring : static; supplies the accumulator identity and the per-step
         tile combine (plus-times keeps the single-``jnp.dot`` MXU path).
+    seg_start : static segment-offset launch — execute products
+        ``[seg_start, seg_start + nprod)`` of the schedule arrays. The
+        chunked 1D ring streams one contiguous schedule segment per
+        payload chunk through the same prefetched arrays instead of
+        materializing per-segment slices.
     """
     if nprod == 0:
         # an empty schedule's output is all additive identities — for
@@ -112,17 +118,20 @@ def bsr_spgemm_pallas(a_tiles, b_tiles, a_slot, b_slot, c_slot, flags,
         in_specs=[
             # index_map signature: (grid_idx, *prefetch_refs)
             pl.BlockSpec((None, bs, bs),
-                         lambda s, a_s, b_s, c_s, f: (a_s[s], 0, 0)),
+                         lambda s, a_s, b_s, c_s, f: (a_s[s + seg_start],
+                                                      0, 0)),
             pl.BlockSpec((None, bs, bs),
-                         lambda s, a_s, b_s, c_s, f: (b_s[s], 0, 0)),
+                         lambda s, a_s, b_s, c_s, f: (b_s[s + seg_start],
+                                                      0, 0)),
         ],
         out_specs=pl.BlockSpec((None, bs, bs),
-                               lambda s, a_s, b_s, c_s, f: (c_s[s], 0, 0)),
+                               lambda s, a_s, b_s, c_s, f: (c_s[s + seg_start],
+                                                            0, 0)),
         scratch_shapes=[pltpu.VMEM((bs, bs), jnp.float32)],
     )
 
     return launch(
-        functools.partial(_kernel, semiring=semiring),
+        functools.partial(_kernel, semiring=semiring, seg_start=seg_start),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((nc, bs, bs), out_dtype),
         interpret=interpret,

@@ -11,7 +11,8 @@ __all__ = ["bsr_spgemm_ref"]
 
 def bsr_spgemm_ref(a_tiles, b_tiles, a_slot, b_slot, c_slot,
                    *, nc: int, out_dtype=jnp.float32,
-                   semiring: Semiring = PLUS_TIMES):
+                   semiring: Semiring = PLUS_TIMES, seg_start: int = 0,
+                   seg_len: int = None):
     """Segment-reduce formulation of the same schedule.
 
     C[c_slot[s]] (+)= A[a_slot[s]] ⊗ B[b_slot[s]]  for every product s,
@@ -21,12 +22,20 @@ def bsr_spgemm_ref(a_tiles, b_tiles, a_slot, b_slot, c_slot,
     products at once (O(nprod·bs²) intermediate) — it is the reference
     engine, not the product path. Padded schedules follow the same
     garbage-slot convention (pads target slot ``nc-1``, dropped by the
-    caller). Unscheduled segments come back as the identity of the
+    caller). ``seg_start``/``seg_len`` mirror the Pallas kernel's static
+    segment-offset launch: only products ``[seg_start, seg_start+seg_len)``
+    execute (the chunked ring streams one schedule segment per payload
+    chunk). Unscheduled segments come back as the identity of the
     underlying jax segment reduce (0 for segment_sum, ±inf for
     segment_min/max) — unspecified from the kernel; ring callers mask
     them to ``semiring.zero`` before decoding either way.
     """
     bs = a_tiles.shape[-1]
+    if seg_len is None:
+        seg_len = len(a_slot) - seg_start
+    a_slot = a_slot[seg_start:seg_start + seg_len]
+    b_slot = b_slot[seg_start:seg_start + seg_len]
+    c_slot = c_slot[seg_start:seg_start + seg_len]
     if len(a_slot) == 0:
         return jnp.full((max(nc, 1), bs, bs), semiring.zero, dtype=out_dtype)
     prods = semiring.jnp_matmul(

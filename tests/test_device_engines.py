@@ -106,6 +106,120 @@ def test_cross_algorithm_grid_on_8_devices():
 
 
 # ---------------------------------------------------------------------------
+# chunked (double-buffered) ring vs the unchunked baseline
+# ---------------------------------------------------------------------------
+
+CHUNK_SCRIPT = textwrap.dedent("""
+    import numpy as np
+    from _propcheck import strategies as st
+    from repro.core import by_name, from_dense
+    from repro.core.spgemm_1d import spgemm_1d
+    from repro.core.spgemm_1d_device import build_device_plan, run_device_spgemm
+
+    SEMIRINGS = ["plus_times", "bool_or_and", "min_plus"]
+
+    def check(a, b, nparts, bs, tag):
+        # chunk grid: singleton steps, pairs, one group per ring (chunk=P
+        # covers every step), and chunk > steps (degenerates to unchunked
+        # segmentation with a single receive group)
+        chunks = (1, 2, nparts, nparts + 3)
+        cases = 0
+        for srname in SEMIRINGS:
+            sr = by_name(srname)
+            orc = spgemm_1d(a, b, nparts, semiring=sr).concat()
+            if srname == "plus_times":
+                orc = orc.prune(0.0)
+            base = build_device_plan(a, b, nparts=nparts, bs=bs, semiring=sr)
+            un_peak = base.stats["peak_payload_tiles"]
+            c0 = run_device_spgemm(base)
+            ctx = (tag, srname, "unchunked")
+            assert np.array_equal(c0.indptr, orc.indptr), ctx
+            assert np.array_equal(c0.indices, orc.indices), ctx
+            assert np.array_equal(c0.data, orc.data.astype(np.float32)), ctx
+            peaks = []
+            for chunk in chunks:
+                plan = build_device_plan(a, b, nparts=nparts, bs=bs,
+                                         semiring=sr, chunk=chunk)
+                s = plan.stats
+                peaks.append(s["peak_payload_tiles"])
+                # the peak the plan reports is exactly the double-buffer
+                # working set of its own receive chunks: own stack +
+                # max adjacent pair (current + prefetched next)
+                rs = list(plan.seg_payload_sizes[1:])
+                if not rs:
+                    want = s["na_max"]
+                elif len(rs) == 1:
+                    want = s["na_max"] + rs[0]
+                else:
+                    want = s["na_max"] + max(rs[i] + rs[i + 1]
+                                             for i in range(len(rs) - 1))
+                assert s["peak_payload_tiles"] == want, (tag, srname, chunk)
+                assert s["peak_payload_tiles"] <= un_peak, (tag, srname,
+                                                            chunk)
+                assert s["chunks"] == len(plan.seg_steps)
+                for engine in ("pallas", "jnp"):
+                    c = run_device_spgemm(plan, engine=engine)
+                    ctx = (tag, srname, chunk, engine)
+                    assert np.array_equal(c.indptr, orc.indptr), ctx
+                    assert np.array_equal(c.indices, orc.indices), ctx
+                    assert np.array_equal(c.data,
+                                          orc.data.astype(np.float32)), ctx
+                    cases += 1
+            # finer chunking never enlarges the working set: any chunk=c
+            # adjacent pair is covered by a coarser plan's adjacent pair,
+            # and chunk > steps collapses to the unchunked peak
+            assert peaks == sorted(peaks), (tag, srname, peaks)
+            assert peaks[-1] == un_peak, (tag, srname, peaks)
+        return cases
+
+    case = 0
+    # random integer pairs, non-tile-multiple dims (propcheck strategy)
+    strat = st.int_matmul_pair()
+    for ci, (nparts, bs) in enumerate([(4, 8), (8, 16)]):
+        rng = np.random.default_rng(100 + ci)
+        a, b, _, _ = strat.example(rng)
+        case += check(a, b, nparts, bs, f"rand{ci}")
+
+    # banded operands at P=8: far ring steps carry zero tiles, so whole
+    # chunks are empty — the pipeline must skip them without contributing
+    n = 100                         # not a multiple of bs=16
+    r = np.random.default_rng(7)
+    dense = np.zeros((n, n))
+    ii, jj = np.indices((n, n))
+    band = np.abs(ii - jj) <= 6
+    dense[band] = np.rint(2 * r.standard_normal(band.sum()))
+    ab = from_dense(dense)
+    case += check(ab, ab, 8, 16, "banded")
+
+    # dense-ish square at P=8: every step carries payload, so singleton
+    # chunks must cut the peak strictly below the unchunked baseline
+    er = from_dense(np.rint(2 * r.standard_normal((96, 96)))
+                    * (r.random((96, 96)) < 0.3))
+    p1 = build_device_plan(er, er, nparts=8, bs=16, chunk=1)
+    pN = build_device_plan(er, er, nparts=8, bs=16)
+    assert p1.stats["peak_payload_tiles"] < pN.stats["peak_payload_tiles"], (
+        p1.stats["peak_payload_tiles"], pN.stats["peak_payload_tiles"])
+    assert p1.stats["overlap_fraction"] > 0.0
+    assert pN.stats["overlap_fraction"] == 0.0
+
+    print("CASES", case)
+    print("ALLOK")
+""")
+
+
+def test_chunked_ring_differential_grid_on_8_devices():
+    """k-chunk streaming vs the unchunked ring, bitwise vs the host
+    oracle: 3 semirings x chunk {1, 2, P, >steps} x both engines, over
+    random non-tile-multiple pairs and a banded input whose far ring
+    steps (whole chunks) are empty; plus the double-buffer peak working
+    set pinned to own + current + next and strictly below the unchunked
+    baseline on a dense-ish input."""
+    out = run_subprocess(CHUNK_SCRIPT, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "ALLOK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
 # stats surface + accounting invariants (plan construction is host-side;
 # no multi-device subprocess needed)
 # ---------------------------------------------------------------------------

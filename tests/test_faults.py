@@ -232,6 +232,10 @@ def test_fault_grid_every_call_bitwise_or_typed():
     s = _session(fault_injector=inj)
     pair = st.int_matmul_pair(max_dim=24, density=0.2)
     a, b, _, _ = pair.example(np.random.default_rng(0))
+    # payload dtype: the values-only repack calls must be same-dtype
+    # (foreign-dtype repacks are rejected at ingress, not laddered)
+    a = a.astype(np.float32)
+    b = b.astype(np.float32)
     a2 = CSC(a.indptr.copy(), a.indices.copy(), a.data + 1.0, a.shape)
 
     served = failed = 0
@@ -344,7 +348,7 @@ def test_repack_fault_falls_back_with_fresh_values():
     """A corrupted repack quarantines the hit entry; the jnp rung serves
     the *new* values bitwise-correct (no stale payload survives)."""
     s = _session()
-    a = _int_matrix(30, seed=7)
+    a = _int_matrix(30, seed=7).astype(np.float32)   # payload dtype
     s.matmul(a, a, bs=16)
     a2 = CSC(a.indptr.copy(), a.indices.copy(), a.data + 3.0, a.shape)
 

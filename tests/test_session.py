@@ -82,7 +82,7 @@ def test_values_only_change_repacks_without_replanning():
     s.matmul(a, a, bs=16)
     traces = s.stats["traces"]
 
-    a2 = a.astype(np.float64)
+    a2 = a.astype(np.float32)       # payload dtype: repack stays legal
     a2.data[:] = a.data * 3.0 + 1.0            # same structure, new values
     c = s.matmul(a2, a2, bs=16)
     assert s.last_call["cache_hit"] and s.last_call["repacked"]
@@ -105,7 +105,7 @@ def test_one_sided_value_change_repacks_one_side():
     s = SpGEMMSession()
     s.matmul(a, b, bs=16)
     traces = s.stats["traces"]
-    b2 = b.astype(np.float64)
+    b2 = b.astype(np.float32)       # payload dtype: repack stays legal
     b2.data[:] = b.data + 2.0
     b2.data[b2.data == 0] = 1.0
     c = s.matmul(a, b2, bs=16)
@@ -119,6 +119,59 @@ def test_one_sided_value_change_repacks_one_side():
     new_a, new_b = repack_ring_payloads(plan, b=b2)
     assert new_a is None and new_b is not None
     assert new_b.shape == plan.b_tiles.shape
+
+
+def test_dtype_mismatched_repack_rejected_same_dtype_accepted():
+    """A values-only repack whose operand dtype differs from the session's
+    payload dtype raises a typed ``ValidationError`` (stage "repack") at
+    ingress — blockize would silently narrow f64 values into the f32-keyed
+    entry — and the rejection must neither quarantine the healthy entry
+    nor fall through the degradation ladder (a colder rung would replan
+    and *accept* the cast). A same-dtype values repack stays the ordinary
+    happy path."""
+    from repro.core.validate import ValidationError
+    a = _int_matrix()
+    s = SpGEMMSession()
+    s.matmul(a, a, bs=16)
+
+    bad = a.astype(np.float64)
+    bad.data[:] = a.data + 2.0       # new values AND a foreign dtype
+    with pytest.raises(ValidationError, match="repack") as ei:
+        s.matmul(bad, bad, bs=16)
+    assert ei.value.stage == "repack"
+    assert s.stats["validation_failures"] == 1
+    assert s.stats["payload_repacks"] == 0      # rejected before mutation
+    assert s.stats["quarantined"] == 0          # entry stays healthy
+    assert s.stats["fallbacks"] == 0            # no ladder laundering
+
+    # same structure + same values at the payload dtype: happy repack
+    good = a.astype(np.float32)
+    good.data[:] = a.data + 2.0
+    c = s.matmul(good, good, bs=16)
+    assert s.last_call["cache_hit"] and s.last_call["repacked"]
+    assert s.stats["payload_repacks"] == 1
+    _assert_bitwise(c, _cold_run(good, good, bs=16))
+
+
+def test_chunk_is_part_of_cache_key():
+    """The k-chunk streaming knob keys the 1D entry like geometry does:
+    chunked and unchunked plans are distinct cache entries, both decode
+    bitwise to the cold run, and an invalid chunk is rejected upfront."""
+    a = _int_matrix()
+    s = SpGEMMSession()
+    c0 = s.matmul(a, a, bs=16)
+    c1 = s.matmul(a, a, bs=16, chunk=2)
+    assert not s.last_call["cache_hit"]
+    assert s.stats["plan_cache_misses"] == 2
+    _assert_bitwise(c1, c0)
+    s.matmul(a, a, bs=16, chunk=2)              # chunked entry now cached
+    assert s.last_call["cache_hit"]
+    with pytest.raises(ValueError, match="chunk"):
+        s.matmul(a, a, bs=16, chunk=0)
+    # 2d ignores chunk (like nblocks): same entry either way
+    s.matmul(a, a, algorithm="2d", grid=1, bs=16)
+    s.matmul(a, a, algorithm="2d", grid=1, bs=16, chunk=4)
+    assert s.last_call["cache_hit"]
 
 
 def test_interpret_alongside_session_is_rejected():
@@ -242,7 +295,7 @@ MULTI_DEVICE_SCRIPT = textwrap.dedent("""
     a = erdos_renyi(70, 70, 4.0, seed=9)
     a.data[:] = np.rint(2 * a.data)
     a.data[a.data == 0] = 1.0
-    a2 = a.astype(np.float64)
+    a2 = a.astype(np.float32)       # payload dtype: repack stays legal
     a2.data[:] = a.data * 2.0 + 1.0
 
     s = SpGEMMSession()

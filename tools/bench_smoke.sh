@@ -31,8 +31,19 @@ for name, r in rows.items():
         assert float(r["value"]) >= 1.0, \
             f"exact bytes exceed padded bytes at {name}: {r['value']}"
 
+# double-buffered ring: chunking must actually shrink the resident
+# payload working set and overlap some of the fetch behind compute
+ck_peak = float(rows["chunk/peak_payload_tiles"]["value"])
+un_peak = float(rows["chunk/unchunked_peak_tiles"]["value"])
+assert ck_peak < un_peak, \
+    f"chunked peak {ck_peak} not below unchunked baseline {un_peak}"
+overlap = float(rows["chunk/overlap_fraction"]["value"])
+assert overlap > 0.0, \
+    f"chunked ring models zero fetch/compute overlap ({overlap})"
+
 print(f"bench smoke OK: planner speedup {speedup:.1f}x, "
-      f"engines recorded: {', '.join(engines)}")
+      f"chunked peak {ck_peak:.0f}/{un_peak:.0f} tiles at "
+      f"{overlap:.0%} overlap, engines recorded: {', '.join(engines)}")
 PY
 
 # Device-engine comparison smoke: run the 1D ring, device 2D SUMMA and

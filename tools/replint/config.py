@@ -81,7 +81,7 @@ SESSION_ONLY_NAMES = frozenset({
 PLANNER_HOT_FUNCTIONS = frozenset({
     # 1D ring planning / decode (core/spgemm_1d_device.py)
     "payload_need_maps", "build_device_plan", "repack_ring_payloads",
-    "decode_ring_output",
+    "decode_ring_output", "segment_ring_schedule",
     # 2D/3D planning / decode (core/spgemm_2d_device.py, _3d_device.py)
     "build_summa_plan", "repack_summa_payloads", "decode_summa_output",
     # shared packing/decode (core/device_common.py)
@@ -184,4 +184,5 @@ DEVICE_COMMON_MODULE = "repro.core.device_common"
 REQUIRED_STATS_FALLBACK = (
     "comm_bytes_planned", "comm_bytes_padded", "messages",
     "dense_flops", "plan_seconds",
+    "peak_payload_tiles", "chunks", "overlap_fraction",
 )
