@@ -29,13 +29,14 @@ from . import (cv_mema, device_compare, device_ring, fault_injection,
                fig04_permutation, fig05_comm_volume, fig06_block_fetch,
                fig07_config_sweep, fig08_breakdown, fig09_strong_scaling,
                fig10_rta, fig12_outer_product, fig13_bc, moe_dispatch,
-               session_amortization)
+               session_amortization, serving_throughput)
 
 MODULES = [
     fig04_permutation, fig05_comm_volume, fig06_block_fetch,
     fig07_config_sweep, fig08_breakdown, fig09_strong_scaling,
     fig10_rta, fig12_outer_product, fig13_bc, cv_mema, moe_dispatch,
     device_ring, device_compare, session_amortization, fault_injection,
+    serving_throughput,
 ]
 
 DEFAULT_JSON = "BENCH_paper_figs.json"
@@ -55,8 +56,16 @@ def merge_trajectory(path: str, entries: list, scale: int, failures: int,
         try:
             with open(path) as fh:
                 data = json.load(fh)
-        except (json.JSONDecodeError, OSError):
-            pass                       # corrupt trajectory: start fresh
+        except (json.JSONDecodeError, OSError) as e:
+            # a trajectory is history; never silently destroy it. Park the
+            # unreadable file next to the fresh one and say so — if even
+            # the rename fails, crash rather than overwrite.
+            corrupt = path + ".corrupt"
+            print(f"# warning: trajectory {path} is unreadable "
+                  f"({type(e).__name__}: {e}); preserving it as {corrupt} "
+                  f"and starting fresh", file=sys.stderr)
+            os.replace(path, corrupt)
+            data = dict(scale=scale, failures=0, rows=[])
     merged = {(r.get("bench"), r.get("name")): r
               for r in data.get("rows", []) if isinstance(r, dict)}
     for r in entries:

@@ -1,0 +1,68 @@
+"""Multi-tenant SpGEMM serving quickstart.
+
+    PYTHONPATH=src python examples/serve_quickstart.py
+
+Two tenants share one social-graph structure — the serving sweet spot the
+paper's 1D plan reuse enables. Alice repeatedly squares the shared
+adjacency (her concurrent requests coalesce into ONE cached multiply);
+Bob squares a values-reweighted twin of the same structure, which rides
+the session's values-only repack path on the plan Alice warmed. One
+plan, one trace, every caller answered.
+"""
+
+import numpy as np
+
+from repro.core import banded_clustered
+from repro.serve import ServicePolicy, SpGEMMRequest, SpGEMMService
+
+
+def main():
+    n = 512
+    g = banded_clustered(n, 16, 6.0, seed=0)
+    g.data[:] = np.rint(2 * g.data)
+    g.data[g.data == 0] = 1.0
+    g = g.astype(np.float32)
+
+    # bob's edge weights differ; the sparsity structure is identical
+    g_bob = g.astype(np.float32)
+    g_bob.data[:] = g.data * 3.0
+
+    svc = SpGEMMService(policy=ServicePolicy(tenant_quota=8))
+    print(f"shared graph {g.shape}, nnz={g.nnz}")
+
+    # warm the shared plan before traffic arrives
+    svc.prefetch("alice", g, g, bs=32)
+
+    for wave in range(3):
+        reqs = [SpGEMMRequest(tenant="alice", a=g, b=g, bs=32)
+                for _ in range(4)]
+        reqs += [SpGEMMRequest(tenant="bob", a=g_bob, b=g_bob, bs=32)
+                 for _ in range(4)]
+        results = svc.serve(reqs)
+        served = sum(r.ok for r in results)
+        hits = sum(r.cache_hit for r in results)
+        print(f"wave {wave}: {served}/{len(results)} served, "
+              f"{hits} from the warm plan")
+
+    st = svc.stats()
+    sess = svc.session.stats
+    print(f"\ncoalesce rate {st['coalesce_rate']:.0%}, "
+          f"cache hit rate {st['cache_hit_rate']:.0%}, "
+          f"p50 {st['latency_p50_s'] * 1e3:.2f} ms")
+    print(f"session: {sess['traces']} trace serves both tenants "
+          f"({sess['payload_repacks']} values-only repacks, "
+          f"{sess['bytes_cached'] / 2**20:.2f} MiB cached)")
+
+    # both tenants got *their* answer: spot-check against the host oracle
+    from repro.core import spgemm_1d
+    alice = next(r for r in results if r.tenant == "alice")
+    bob = next(r for r in results if r.tenant == "bob")
+    ref_a = spgemm_1d(g, g, 1).concat().prune(0.0).astype(np.float32)
+    ref_b = spgemm_1d(g_bob, g_bob, 1).concat().prune(0.0).astype(np.float32)
+    assert np.array_equal(alice.value.data, ref_a.data)
+    assert np.array_equal(bob.value.data, ref_b.data)
+    print("oracle check: both tenants bitwise-correct")
+
+
+if __name__ == "__main__":
+    main()

@@ -102,10 +102,13 @@ REQUIRED_STATS = ("comm_bytes_planned", "comm_bytes_padded", "messages",
 #   quarantined       : cached entries dropped because a stage failed on
 #                       them (poisoned executables never survive)
 #   validation_failures : operands rejected at session ingress
+#   bytes_cached      : device bytes currently pinned by cached entries'
+#                       payload/schedule stacks (the quantity the LRU byte
+#                       budgets bound; falls on eviction and quarantine)
 SESSION_STATS = ("calls", "plan_cache_hits", "plan_cache_misses",
                  "plan_seconds_saved", "payload_repacks", "traces",
                  "evictions", "retries", "fallbacks", "quarantined",
-                 "validation_failures")
+                 "validation_failures", "bytes_cached")
 
 
 def snap_to_tiles(part: Partition1D, bs: int) -> Partition1D:

@@ -26,6 +26,9 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="decode steps between early-exit host syncs "
+                         "(0 = never probe, run all --max-new steps)")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -38,7 +41,8 @@ def main(argv=None):
                             size=rng.integers(2, args.prompt_len + 1))
                .astype(np.int32) for _ in range(args.requests)]
     t0 = time.perf_counter()
-    res = engine.generate(prompts, max_new_tokens=args.max_new)
+    res = engine.generate(prompts, max_new_tokens=args.max_new,
+                          sync_every=args.sync_every)
     dt = time.perf_counter() - t0
     total_new = int(res.lengths.sum())
     print(f"generated {total_new} tokens for {len(prompts)} requests "

@@ -1,5 +1,5 @@
-from .fault_tolerance import (RetryPolicy, StepTimer, StragglerStats,
-                              TrainLoopRunner, with_retries)
+from .fault_tolerance import (CircuitBreaker, RetryPolicy, StepTimer,
+                              StragglerStats, TrainLoopRunner, with_retries)
 from .faults import (STAGES, FaultInjector, InjectedFault,
                      SimulatedCorruption, SimulatedOOM,
                      SimulatedXlaRuntimeError)

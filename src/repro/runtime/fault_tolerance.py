@@ -34,8 +34,8 @@ import numpy as np
 
 from ..checkpoint import CheckpointManager
 
-__all__ = ["RetryPolicy", "with_retries", "StragglerStats", "StepTimer",
-           "TrainLoopRunner"]
+__all__ = ["RetryPolicy", "with_retries", "CircuitBreaker", "StragglerStats",
+           "StepTimer", "TrainLoopRunner"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +84,57 @@ def with_retries(fn: Callable, policy: RetryPolicy = RetryPolicy(),
         raise AssertionError("unreachable")
 
     return wrapped
+
+
+class CircuitBreaker:
+    """Consecutive-failure circuit breaker with a cooldown half-open state.
+
+    The SpGEMM session already breaks per *cache key* (a poisoned plan
+    stops being re-planned); this is the coarser per-*principal* breaker
+    the serving layer keeps per tenant: a tenant whose requests keep
+    failing is cut off at admission instead of burning a retry ladder per
+    request, and other tenants' breakers never see those failures.
+
+    States: ``closed`` (all traffic passes) → ``open`` after ``threshold``
+    consecutive failures (``allow()`` is False) → ``half_open`` once
+    ``cooldown_s`` has elapsed on the injectable ``clock`` (one probe
+    request passes; success closes the circuit, failure re-opens it and
+    restarts the cooldown). ``clock`` is injectable for the same reason
+    the session's retry sleep is — tier-1 never waits on wall time.
+    """
+
+    def __init__(self, threshold: int = 3, cooldown_s: float = 30.0,
+                 clock: Callable[[], float] = time.monotonic):
+        if threshold < 1:
+            raise ValueError(f"threshold must be >= 1, got {threshold}")
+        if cooldown_s < 0:
+            raise ValueError(f"cooldown_s must be >= 0, got {cooldown_s}")
+        self.threshold = threshold
+        self.cooldown_s = cooldown_s
+        self._clock = clock
+        self.failures = 0          # consecutive failures since last success
+        self.opened_at: Optional[float] = None
+
+    @property
+    def state(self) -> str:
+        if self.opened_at is None:
+            return "closed"
+        if self._clock() - self.opened_at >= self.cooldown_s:
+            return "half_open"
+        return "open"
+
+    def allow(self) -> bool:
+        """May a request pass right now? (half-open admits the probe)"""
+        return self.state != "open"
+
+    def record_success(self) -> None:
+        self.failures = 0
+        self.opened_at = None
+
+    def record_failure(self) -> None:
+        self.failures += 1
+        if self.failures >= self.threshold:
+            self.opened_at = self._clock()
 
 
 class StragglerStats:

@@ -28,8 +28,10 @@ __all__ = ["ServeEngine", "GenerationResult"]
 
 @dataclasses.dataclass
 class GenerationResult:
-    tokens: np.ndarray            # (B, <=max_new) generated ids
-    lengths: np.ndarray           # (B,) tokens generated per request
+    tokens: np.ndarray            # (B, <=max_new) generated ids; slots past
+                                  # a request's EOS are masked to eos_id
+    lengths: np.ndarray           # (B,) tokens generated per request,
+                                  # EXCLUDING the EOS token itself
     prefill_len: int
 
 
@@ -55,8 +57,23 @@ class ServeEngine:
         self._decode = jax.jit(_decode)
 
     def generate(self, prompts: List[np.ndarray], *, max_new_tokens: int = 16,
-                 greedy: bool = True, seed: int = 0) -> GenerationResult:
-        """prompts: list of 1-D int arrays (ragged). Pads to one batch."""
+                 greedy: bool = True, seed: int = 0,
+                 sync_every: int = 8) -> GenerationResult:
+        """prompts: list of 1-D int arrays (ragged). Pads to one batch.
+
+        The decode loop is device-resident: per-step tokens and the EOS
+        mask stay on device, and the only host↔device syncs are the
+        early-exit probe every ``sync_every`` steps (0 = never probe,
+        always run ``max_new_tokens`` steps) plus one final pull of the
+        whole token matrix. All completion bookkeeping — lengths
+        (excluding the EOS token itself) and masking of slots decoded
+        after a request finished — is derived on the host from that one
+        matrix, so it cannot drift from the tokens actually produced.
+        """
+        if not prompts:
+            return GenerationResult(tokens=np.zeros((0, 0), np.int32),
+                                    lengths=np.zeros(0, np.int64),
+                                    prefill_len=0)
         assert len(prompts) <= self.batch_slots
         b = self.batch_slots
         plen = max(len(p) for p in prompts)
@@ -69,27 +86,34 @@ class ServeEngine:
             self.params, {"tokens": jnp.asarray(toks)}, caches)
 
         key = jax.random.PRNGKey(seed)
-        out = np.zeros((b, max_new_tokens), np.int32)
-        done = np.zeros(b, bool)
-        lengths = np.zeros(b, np.int64)
-        cur = None
+        steps = []                               # device-resident (b,) tokens
+        seen_eos = jnp.zeros(b, bool)
         for t in range(max_new_tokens):
             if greedy:
-                nxt = jnp.argmax(logits, axis=-1)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             else:
                 key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(sub, logits)
-            nxt_np = np.asarray(nxt, np.int32)
-            out[:, t] = nxt_np
-            newly = (nxt_np == self.eos_id) & ~done
-            lengths[~done] += 1
-            done |= newly
-            if done.all():
-                out = out[:, :t + 1]
+                nxt = jax.random.categorical(sub, logits).astype(jnp.int32)
+            steps.append(nxt)
+            seen_eos = seen_eos | (nxt == self.eos_id)
+            if t + 1 == max_new_tokens:
                 break
+            if sync_every and (t + 1) % sync_every == 0 \
+                    and bool(jax.device_get(seen_eos.all())):
+                break                            # every slot has finished
             logits, caches = self._decode(
-                self.params, {"tokens": jnp.asarray(nxt_np)[:, None]},
-                caches)
+                self.params, {"tokens": nxt[:, None]}, caches)
+
+        out = np.asarray(jnp.stack(steps, axis=1), np.int32)   # ONE sync
+        nsteps = out.shape[1]
+        is_eos = out == self.eos_id
+        # first EOS position per row, or nsteps when the row never finished
+        first = np.where(is_eos.any(axis=1),
+                         is_eos.argmax(axis=1), nsteps).astype(np.int64)
+        # a finished row kept decoding until the batch stopped: everything
+        # at/after its EOS is not part of the answer — mask it to eos_id
+        out = np.where(np.arange(nsteps)[None, :] > first[:, None],
+                       self.eos_id, out).astype(np.int32)
         return GenerationResult(tokens=out[:len(prompts)],
-                                lengths=lengths[:len(prompts)],
+                                lengths=first[:len(prompts)],
                                 prefill_len=plen)

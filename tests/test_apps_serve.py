@@ -149,3 +149,76 @@ def test_serve_engine_eos_stops():
     # eos never produced => runs to max_new
     r = eng.generate([np.array([1], np.int32)], max_new_tokens=4)
     assert r.tokens.shape[1] == 4
+
+
+def test_serve_engine_empty_prompts():
+    """Regression: generate([]) used to crash in prefill padding."""
+    cfg = smoke_config("musicgen-large")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=64, batch_slots=2)
+    r = eng.generate([])
+    assert r.tokens.shape == (0, 0)
+    assert r.lengths.shape == (0,)
+    assert r.prefill_len == 0
+
+
+def test_serve_engine_eos_accounting():
+    """Regression: lengths counted the EOS token itself and slots after an
+    early EOS kept whatever the still-running batch produced. Lengths must
+    exclude EOS and every post-EOS slot must read eos_id."""
+    cfg = smoke_config("musicgen-large")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompts = [np.array([1, 2, 3], np.int32), np.array([9, 8], np.int32)]
+
+    # baseline stream with an EOS that never fires
+    base = ServeEngine(cfg, params, max_len=64, batch_slots=2, eos_id=-2) \
+        .generate(prompts, max_new_tokens=8, sync_every=0)
+    assert base.lengths.tolist() == [8, 8]
+
+    # re-run declaring a token the greedy stream actually emits as EOS
+    eos = int(base.tokens[0, base.tokens.shape[1] // 2])
+    eng = ServeEngine(cfg, params, max_len=64, batch_slots=2, eos_id=eos)
+    res = eng.generate(prompts, max_new_tokens=8, sync_every=0)
+    for i in range(2):
+        row, want = res.tokens[i], base.tokens[i]
+        hits = np.nonzero(want[:res.tokens.shape[1]] == eos)[0]
+        length = int(hits[0]) if hits.size else res.tokens.shape[1]
+        assert int(res.lengths[i]) == length          # EOS excluded
+        np.testing.assert_array_equal(row[:length], want[:length])
+        assert (row[length:] == eos).all()            # post-EOS masked
+    assert (res.lengths < 8).any()                    # the EOS really fired
+
+
+def test_serve_engine_sync_every_equivalent():
+    """Regression: the decode loop synced device->host every token. The
+    batched bookkeeping must produce identical tokens whatever the host
+    probe cadence, and must probe at most ceil(steps/sync_every) times."""
+    cfg = smoke_config("musicgen-large")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=64, batch_slots=2)
+    prompts = [np.array([1, 2, 3], np.int32), np.array([9, 8], np.int32)]
+
+    ref = eng.generate(prompts, max_new_tokens=8, sync_every=0)
+    for sync_every in (1, 3, 8):
+        got = eng.generate(prompts, max_new_tokens=8, sync_every=sync_every)
+        n = min(got.tokens.shape[1], ref.tokens.shape[1])
+        np.testing.assert_array_equal(got.tokens[:, :n], ref.tokens[:, :n])
+        np.testing.assert_array_equal(got.lengths, ref.lengths)
+
+    probes = []
+    real_get = jax.device_get
+
+    def counting_get(x):
+        probes.append(1)
+        return real_get(x)
+
+    import repro.serve.engine as engine_mod
+    old = engine_mod.jax.device_get
+    engine_mod.jax.device_get = counting_get
+    try:
+        eng.generate(prompts, max_new_tokens=8, sync_every=4)
+    finally:
+        engine_mod.jax.device_get = old
+    # 8 steps probed every 4 => exactly 1 in-loop probe (the step-8
+    # boundary is the natural end of the loop, never probed)
+    assert len(probes) == 1

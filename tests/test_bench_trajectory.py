@@ -73,3 +73,21 @@ def test_corrupt_trajectory_file_is_replaced(tmp_path, monkeypatch, capsys):
     assert bench_run.main(["--json", str(path)]) == 0
     data = json.load(open(path))
     assert {r["bench"] for r in data["rows"]} == {"alpha"}
+
+    # the corrupt file is never silently discarded: its bytes survive at
+    # <path>.corrupt and the operator is told on stderr
+    corrupt = tmp_path / "traj.json.corrupt"
+    assert corrupt.read_text() == "{not json"
+    err = capsys.readouterr().err
+    assert "warning" in err and "traj.json.corrupt" in err
+
+
+def test_corrupt_preservation_is_idempotent(tmp_path, monkeypatch, capsys):
+    """A second corruption overwrites the parked copy rather than crashing
+    on an existing ``.corrupt`` file."""
+    path = tmp_path / "traj.json"
+    monkeypatch.setattr(bench_run, "MODULES", [_stub("alpha", [("x", 1.0)])])
+    for payload in ("{not json", "[still not json"):
+        path.write_text(payload)
+        assert bench_run.main(["--json", str(path)]) == 0
+        assert (tmp_path / "traj.json.corrupt").read_text() == payload

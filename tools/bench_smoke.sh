@@ -146,6 +146,41 @@ print(f"fault-injection smoke OK: {len(cases)} cases bitwise-correct "
       f"under {total_faults} injected faults")
 PY
 
+# Serving-throughput smoke: the multi-tenant coalescing service. Every
+# served result must be bitwise oracle-equal, requests must actually
+# coalesce (rate > 0, plans cache-hit), and the coalesced steady state
+# must clear 5x the uncoalesced per-request baseline under the mixed
+# two-tenant workload.
+python -m benchmarks.serving_throughput --json BENCH_paper_figs.json
+
+python - <<'PY'
+import json
+
+rows = {r["name"]: r for r in json.load(open("BENCH_paper_figs.json"))["rows"]
+        if r["bench"] == "serving_throughput"}
+assert rows, "serving_throughput emitted no rows"
+
+matches = {n: float(r["value"]) for n, r in rows.items()
+           if n.endswith("/match_oracle")}
+assert matches, "no match_oracle rows recorded"
+bad = [n for n, v in matches.items() if v != 1.0]
+assert not bad, f"served results diverged from the host oracle: {bad}"
+
+co = float(rows["mixed/coalesce_rate"]["value"])
+assert co > 0.0, f"no requests coalesced (rate {co})"
+hit = float(rows["mixed/cache_hit_rate"]["value"])
+assert hit > 0.0, f"no plan-cache hits while serving (rate {hit})"
+ratio = float(rows["mixed/throughput_ratio_x"]["value"])
+assert ratio >= 5.0, \
+    f"coalesced throughput only {ratio:.1f}x the uncoalesced baseline (< 5x)"
+evict = float(rows["quota/evictions"]["value"])
+assert evict > 0.0, "tenant quota never evicted — budget gate is disarmed"
+
+print(f"serving smoke OK: {len(matches)} tenants oracle-equal, "
+      f"coalesce rate {co:.0%}, hit rate {hit:.0%}, "
+      f"coalesced {ratio:.1f}x uncoalesced")
+PY
+
 # Device-BC smoke: betweenness centrality end-to-end on the device ring
 # (the fig13 --engine device adapter), scores checked against the local
 # oracle so the adapter and the semiring-generic engine path can't rot.

@@ -66,6 +66,7 @@ RS004_SCOPE = (
     "src/repro/apps/*.py",
     "src/repro/serve/*.py",
     "src/repro/launch/serve.py",
+    "src/repro/launch/serve_spgemm.py",
 )
 
 SESSION_ONLY_NAMES = frozenset({
